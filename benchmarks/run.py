@@ -1,0 +1,52 @@
+"""Run every benchmark at reduced size; one CSV block per paper table.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--skip scaling]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-closer sizes (slow)")
+    ap.add_argument("--skip", nargs="*", default=[])
+    args = ap.parse_args()
+
+    from benchmarks import bfs_comm, breakdown, codecs, frontier_stats, teps
+
+    suites = [
+        ("codecs (Tables 5.4/5.5)", codecs.main),
+        ("frontier_stats (Fig 5.2 / Table 5.3)", frontier_stats.main),
+        ("bfs_comm (Tables 7.4/7.5)", bfs_comm.main),
+        ("breakdown (Fig 7.3)", breakdown.main),
+        ("teps (§2.6.3)", teps.main),
+    ]
+    if args.full and "scaling" not in args.skip:
+        from benchmarks import scaling
+
+        suites.append(("scaling (Fig 7.1/7.2)", scaling.main))
+
+    failures = []
+    for name, fn in suites:
+        key = name.split(" ")[0]
+        if key in args.skip:
+            continue
+        print(f"\n===== {name} =====")
+        t0 = time.time()
+        try:
+            fn()
+            print(f"# done in {time.time() - t0:.1f}s")
+        except Exception:  # noqa: BLE001
+            failures.append(name)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+    print("\nALL BENCHMARKS OK")
+
+
+if __name__ == "__main__":
+    main()

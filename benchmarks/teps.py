@@ -1,0 +1,71 @@
+"""Paper §2.6.3: the Graph500 TEPS harness.
+
+Runs the benchmark's Algorithm 1 at reduced scale: untimed generation,
+timed Kernel 1 (CSR construction), N timed BFS iterations from random
+roots with validation, TEPS reported as the harmonic mean (the spec's
+statistic).  64 roots at full scale; reduced here for CPU wall-clock.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import bfs as bfsmod
+from repro.core import validate
+from repro.graphgen import builder, kronecker
+
+
+def run(scale: int = 13, n_roots: int = 8, seed: int = 1, validate_trees: bool = True):
+    import jax
+    import jax.numpy as jnp
+
+    edges = kronecker.kronecker_edges(scale, seed=seed)
+    t0 = time.perf_counter()
+    g = builder.build_csr(edges, n=1 << scale)
+    kernel1_s = time.perf_counter() - t0
+
+    rng = np.random.default_rng(seed)
+    deg = g.degrees()
+    roots = rng.choice(np.nonzero(deg > 0)[0], size=n_roots, replace=False)
+    src, dst = jnp.asarray(g.src), jnp.asarray(g.dst)
+    # warm-up compile (untimed, like the spec's untimed setup)
+    jax.block_until_ready(bfsmod.bfs(src, dst, jnp.int32(int(roots[0])), g.n).parent)
+
+    teps_list, times = [], []
+    for root in roots:
+        t0 = time.perf_counter()
+        res = bfsmod.bfs(src, dst, jnp.int32(int(root)), g.n)
+        jax.block_until_ready(res.parent)
+        dt = time.perf_counter() - t0
+        te = validate.traversed_edges(g, np.asarray(res.parent))
+        if validate_trees:
+            v = validate.validate_bfs_tree(g, np.asarray(res.parent), int(root),
+                                           np.asarray(res.level))
+            assert v.ok, v.failures
+        teps_list.append(te / dt)
+        times.append(dt)
+    harmonic = len(teps_list) / sum(1.0 / t for t in teps_list)
+    return {
+        "scale": scale,
+        "n": g.n,
+        "m_input": g.m_input,
+        "kernel1_s": kernel1_s,
+        "n_roots": n_roots,
+        "teps_harmonic_mean": harmonic,
+        "mean_time_s": float(np.mean(times)),
+        "validated": validate_trees,
+    }
+
+
+def main() -> None:
+    r = run()
+    print("scale,n,m_input,kernel1_s,n_roots,TEPS_harmonic,mean_time_s,validated")
+    print(f"{r['scale']},{r['n']},{r['m_input']},{r['kernel1_s']:.3f},"
+          f"{r['n_roots']},{r['teps_harmonic_mean']:.3e},{r['mean_time_s']:.4f},"
+          f"{r['validated']}")
+
+
+if __name__ == "__main__":
+    main()

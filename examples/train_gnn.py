@@ -1,0 +1,71 @@
+"""Train GraphCast-style interaction networks on the icosahedral multimesh.
+
+Builds the refinement-r multimesh (the real GraphCast processor graph),
+attaches synthetic "weather state" node features, and regresses next-state
+targets — the encode-process-decode pipeline end to end.
+
+    PYTHONPATH=src python examples/train_gnn.py --refine 3 --steps 50
+"""
+
+import argparse
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.models import gnn, icosahedron
+from repro.optim import adamw
+from repro.train import step as tstep
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--refine", type=int, default=3)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--d-hidden", type=int, default=64)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--n-vars", type=int, default=16)
+    args = ap.parse_args()
+
+    verts, edges = icosahedron.multimesh(args.refine)
+    n, m = verts.shape[0], edges.shape[0]
+    print(f"multimesh refine={args.refine}: {n:,} nodes, {m:,} directed edges")
+
+    cfg = gnn.GraphCastConfig(
+        n_layers=args.layers, d_hidden=args.d_hidden,
+        d_in=args.n_vars, d_out=args.n_vars, mesh_refinement=args.refine,
+    )
+    rng = np.random.default_rng(0)
+    # synthetic smooth field: value = f(position) + noise; target = advected
+    base = np.stack([verts @ rng.normal(size=3) for _ in range(args.n_vars)], 1)
+    nf = (base + 0.1 * rng.normal(size=(n, args.n_vars))).astype(np.float32)
+    targets = np.roll(base, 1, axis=1).astype(np.float32)
+
+    g = gnn.Graph(
+        nf=jnp.asarray(nf),
+        src=jnp.asarray(edges[:, 0], dtype=jnp.int32),
+        dst=jnp.asarray(edges[:, 1], dtype=jnp.int32),
+        pos=jnp.asarray(verts, dtype=jnp.float32),
+    )
+    batch = {"graph": g, "targets": jnp.asarray(targets)}
+
+    params = gnn.init(cfg, jax.random.PRNGKey(0))
+    opt_cfg = adamw.AdamWConfig(lr=1e-3, warmup_steps=5, total_steps=args.steps)
+    step_fn = jax.jit(
+        tstep.make_train_step(functools.partial(gnn.loss_fn, cfg), opt_cfg)
+    )
+    state = tstep.init_state(params)
+    first = last = None
+    for step in range(args.steps):
+        state, metrics = step_fn(state, batch)
+        loss = float(metrics["loss"])
+        first = loss if first is None else first
+        last = loss
+        if step % 10 == 0:
+            print(f"step {step:3d} loss {loss:.5f}")
+    print(f"loss {first:.5f} -> {last:.5f} ({'improved' if last < first else 'FAILED'})")
+
+
+if __name__ == "__main__":
+    main()

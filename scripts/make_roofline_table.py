@@ -1,0 +1,74 @@
+"""Generate the EXPERIMENTS.md §Dry-run/§Roofline tables from dryrun JSONs."""
+
+import glob
+import json
+import os
+import sys
+
+DIR = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun_base2"
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.2f}ms"
+    return f"{x * 1e6:.1f}us"
+
+
+def fmt_b(x):
+    if x is None:
+        return "-"
+    if x >= 1 << 30:
+        return f"{x / (1 << 30):.2f}GiB"
+    if x >= 1 << 20:
+        return f"{x / (1 << 20):.1f}MiB"
+    return f"{x / 1024:.0f}KiB"
+
+
+rows = []
+for fn in sorted(glob.glob(os.path.join(DIR, "*.json"))):
+    with open(fn) as f:
+        rows.append(json.load(f))
+
+print("## §Dry-run (lower + compile on the production meshes)\n")
+print("| arch | shape | mesh | status | compile | per-dev args | per-dev temps | HLO flops (raw) |")
+print("|---|---|---|---|---|---|---|---|")
+for r in rows:
+    mem = r.get("memory", {})
+    cost = r.get("cost", {})
+    print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['status']} "
+          f"| {r.get('compile_s', '-')}s | {fmt_b(mem.get('argument_bytes'))} "
+          f"| {fmt_b(mem.get('temp_bytes'))} | {cost.get('flops', 0):.3g} |")
+
+print("\n## §Roofline (single-pod 16x16 = 256 chips)\n")
+print("| arch | shape | compute | memory | collective | dominant | MODEL_FLOPS | useful-ratio | roofline-frac |")
+print("|---|---|---|---|---|---|---|---|---|")
+for r in rows:
+    if r["mesh"] != "16x16":
+        continue
+    if r["status"] == "skip":
+        print(f"| {r['arch']} | {r['shape']} | SKIP | | | | | | ({r['skip_reason'][:60]}...) |")
+        continue
+    if r["status"] != "ok":
+        continue
+    t = r["roofline"]
+    print(f"| {r['arch']} | {r['shape']} | {fmt_s(t['compute_s'])} | {fmt_s(t['memory_s'])} "
+          f"| {fmt_s(t['collective_s'])} | **{t['dominant']}** | {t['model_flops']:.3g} "
+          f"| {t['useful_flop_ratio']:.3f} | {t['roofline_fraction']:.4f} |")
+
+# candidates for hillclimbing
+print("\n## hillclimb candidate ranking")
+cands = [r for r in rows if r["mesh"] == "16x16" and r["status"] == "ok"]
+by_frac = sorted(cands, key=lambda r: r["roofline"]["roofline_fraction"])[:6]
+print("worst roofline fraction:")
+for r in by_frac:
+    print(f"  {r['arch']}/{r['shape']}: frac={r['roofline']['roofline_fraction']:.5f} dom={r['roofline']['dominant']}")
+by_coll = sorted(cands, key=lambda r: -r["roofline"]["collective_s"])[:6]
+print("most collective-bound:")
+for r in by_coll:
+    t = r["roofline"]
+    print(f"  {r['arch']}/{r['shape']}: coll={fmt_s(t['collective_s'])} "
+          f"({t['collective_s'] / max(t['compute_s'] + t['memory_s'] + t['collective_s'], 1e-12) * 100:.0f}% of sum) dom={t['dominant']}")

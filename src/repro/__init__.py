@@ -1,0 +1,9 @@
+"""repro — compression-optimized distributed BFS framework (JAX/TPU).
+
+Reproduction (and beyond-paper extension) of Romera, "Optimizing Communication
+by Compression for Multi-GPU Scalable Breadth-First Searches" (2017), rebuilt
+as a TPU-native JAX framework with compressed collectives as a first-class
+feature across BFS, LM training, GNN message passing and recsys serving.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,17 @@
+"""Communication-compression substrate (paper §5).
+
+Two layers:
+
+* :mod:`repro.compression.codecs` — host (numpy) *variable-length* codecs, the
+  faithful analog of the paper's S4-BP128 / VByte / bitmap comparison
+  (Tables 5.4/5.5).  Used by benchmarks and by the host-side Graph500 driver.
+* :mod:`repro.compression.collectives` — *static-shape* compressed collectives
+  for use inside compiled JAX programs (shard_map).  XLA has no ``v``-variant
+  collectives, so runtime variable sizing is replaced by bucketed, globally
+  uniform (count-capacity, bit-width) classes — see DESIGN.md §3.
+
+The in-graph bit-packing itself lives in :mod:`repro.kernels.bitpack`
+(Pallas TPU kernel + jnp oracle).
+"""
+
+from repro.compression import codecs, registry, threshold  # noqa: F401

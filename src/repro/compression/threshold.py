@@ -1,0 +1,71 @@
+"""Compression-threshold policy (paper §5.4.3).
+
+Compressing tiny messages costs more than it saves: the paper gates the
+compression call on a minimum sequence length, and its Future Work (§9)
+proposes *topology-aware* thresholds (skip compression between shared-memory
+ranks where bandwidth is effectively infinite).  Both policies live here.
+
+For the static-shape in-graph path the threshold is resolved at *trace time*
+(message capacity is static), so the policy returns plain bools — no traced
+control flow is needed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ThresholdPolicy:
+    """Decide whether a transfer of ``n_ints`` integers should be compressed.
+
+    Attributes:
+      min_ints: minimum element count before compression pays off
+        (paper §5.4.3 — measured break-even on the Creek platform).
+      same_host_bandwidth_gBps: modeled intra-host bandwidth (GB/s); transfers
+        whose endpoints share a host skip compression when the modeled
+        compress + transmit + decompress time exceeds plain transmit (§9).
+      link_bandwidth_gBps: network link bandwidth, GB/s (TPU ICI ~50).
+      codec_speed_mips: compression speed in millions of ints/second.  The
+        paper's CPU S4-BP128 runs ~3200 MI/s; the on-device TPU bitpack
+        kernel is VPU/memory-bound at ~50000 MI/s (819 GB/s / 16 B/int
+        touched) — the default models the TPU kernel, since a CPU-speed
+        codec cannot pay for itself against a 50 GB/s link.
+      codec_dspeed_mips: decompression speed.
+    """
+
+    min_ints: int = 4096
+    same_host_bandwidth_gBps: float = 200.0
+    link_bandwidth_gBps: float = 50.0  # TPU ICI per-link, GB/s
+    codec_speed_mips: float = 50_000.0
+    codec_dspeed_mips: float = 50_000.0
+
+    @classmethod
+    def paper_creek(cls) -> "ThresholdPolicy":
+        """The paper's environment: CPU SIMD codec + Gigabit Ethernet."""
+        return cls(
+            link_bandwidth_gBps=0.125,  # 1 Gbit/s
+            codec_speed_mips=3200.0,  # Table 5.4, S4-BP128 on Creek
+            codec_dspeed_mips=4700.0,
+        )
+
+    def _times(self, n_ints: int, ratio: float, same_host: bool):
+        bw = (self.same_host_bandwidth_gBps if same_host else self.link_bandwidth_gBps) * 1e9
+        plain_s = n_ints * 4 / bw
+        comp_s = (
+            n_ints / (self.codec_speed_mips * 1e6)
+            + n_ints * 4 / (ratio * bw)
+            + n_ints / (self.codec_dspeed_mips * 1e6)
+        )
+        return plain_s, comp_s
+
+    def should_compress(self, n_ints: int, ratio: float, same_host: bool = False) -> bool:
+        if n_ints < self.min_ints:
+            return False
+        plain_s, comp_s = self._times(n_ints, ratio, same_host)
+        return comp_s < plain_s
+
+    def modeled_speedup(self, n_ints: int, ratio: float, same_host: bool = False) -> float:
+        """Transfer-time speedup of compressed vs plain under this model."""
+        plain_s, comp_s = self._times(n_ints, ratio, same_host)
+        return plain_s / comp_s

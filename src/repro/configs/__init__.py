@@ -1,0 +1,6 @@
+"""Architecture configs: one module per assigned arch + the paper's own.
+
+``get(arch_id)`` / ``list_archs()`` — see repro.configs.common.
+"""
+
+from repro.configs.common import ArchSpec, ShapeSpec, get, list_archs  # noqa: F401

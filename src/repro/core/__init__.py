@@ -1,0 +1,9 @@
+"""The paper's primary contribution: compressed-communication distributed BFS.
+
+* :mod:`repro.core.csr` — device-side graph containers + 2D block partitioner.
+* :mod:`repro.core.bfs` — single-device level-synchronous BFS
+  (``jax.lax.while_loop``; edge-centric SpMV formulation, paper Alg. 2).
+* :mod:`repro.core.distributed_bfs` — 2D-partitioned BFS over ``shard_map``
+  with compressed column/row collectives (paper Alg. 4).
+* :mod:`repro.core.validate` — Graph500 5-rule BFS-tree validator.
+"""

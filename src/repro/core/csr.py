@@ -1,0 +1,136 @@
+"""Device-side graph containers and the 2D block partitioner (paper §2.6.2).
+
+The 2D partition: an R x C processor grid; rank (i, j) owns adjacency block
+``A_ij`` = edges (u -> v) with ``u`` in *column slice* j (width n/C) and
+``v`` in *row slice* i (width n/R).  Vertex *ownership* (who stores
+parent[v] / the frontier bit of v) follows the row-phase output layout:
+the global vertex space is split into R*C chunks of size ``s = n/(R*C)``;
+rank (i, j) owns chunk ``q = i*C + j``.
+
+Static shapes: every per-rank edge block is padded to the same capacity
+``e_cap`` with sentinel edges (src = n_c, dst = s_rows) that fall out of all
+gathers/segment reductions — the TPU-native replacement for the paper's
+"residuum" special cases (§7.2.1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.graphgen.builder import CSRGraph
+
+
+@dataclasses.dataclass(frozen=True)
+class Partition2D:
+    """Geometry of the R x C grid over n (padded) vertices."""
+
+    n: int  # padded global vertex count
+    n_orig: int  # pre-padding vertex count
+    rows: int  # R
+    cols: int  # C
+
+    @property
+    def n_r(self) -> int:  # row-slice width (vertices per grid row)
+        return self.n // self.rows
+
+    @property
+    def n_c(self) -> int:  # column-slice width
+        return self.n // self.cols
+
+    @property
+    def chunk(self) -> int:  # owned-chunk width s
+        return self.n // (self.rows * self.cols)
+
+    def owner(self, v: np.ndarray) -> np.ndarray:
+        """Owned-chunk index q = v // s; rank (q // C, q % C)."""
+        return v // self.chunk
+
+    def transpose_perm(self) -> list[tuple[int, int]]:
+        """ppermute pairs implementing the paper's TransposeVector (Alg. 2 l.4).
+
+        Rank p = i*C + j owns chunk q = p.  The column phase needs rank
+        (i, j) to hold chunk j*R + i (so the column-j all-gather assembles
+        the contiguous column slice).  Returns (src_rank, dst_rank) pairs
+        over the row-major linearized grid.
+        """
+        pairs = []
+        r, c = self.rows, self.cols
+        for i in range(r):
+            for j in range(c):
+                src = i * c + j  # owns chunk q = src
+                q = src
+                # chunk q is needed (in column phase) by rank (i', j') with
+                # j'*R + i' = q  =>  j' = q // R, i' = q % R
+                jp, ip = q // r, q % r
+                dst = ip * c + jp
+                pairs.append((src, dst))
+        return pairs
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockedGraph:
+    """2D-blocked edge arrays, shaped (R, C, e_cap) with local indices.
+
+    ``src_local`` indexes into the column slice [0, n_c); ``dst_local`` into
+    the row slice [0, n_r).  Padding edges use (n_c, n_r) sentinels.
+    """
+
+    part: Partition2D
+    src_local: np.ndarray  # (R, C, e_cap) int32
+    dst_local: np.ndarray  # (R, C, e_cap) int32
+    e_counts: np.ndarray  # (R, C) int64 true edge counts per block
+    m_input: int
+
+    @property
+    def e_cap(self) -> int:
+        return int(self.src_local.shape[-1])
+
+
+def _round_up(x: int, multiple: int) -> int:
+    return -(-x // multiple) * multiple
+
+
+def partition_2d(
+    g: CSRGraph,
+    rows: int,
+    cols: int,
+    chunk_multiple: int = 1024,
+    e_cap_multiple: int = 1024,
+) -> BlockedGraph:
+    """Partition a CSR graph onto an R x C grid with static-capacity blocks.
+
+    ``chunk_multiple`` keeps the owned-chunk width s a multiple of the
+    bit-packing chunk (1024) so compressed exchanges stay lane-aligned.
+    """
+    n = _round_up(max(g.n, rows * cols), rows * cols * chunk_multiple)
+    part = Partition2D(n=n, n_orig=g.n, rows=rows, cols=cols)
+    src, dst = g.src.astype(np.int64), g.dst.astype(np.int64)
+
+    bj = src // part.n_c  # block column of each edge
+    bi = dst // part.n_r  # block row
+    block = bi * cols + bj
+    order = np.argsort(block, kind="stable")
+    src, dst, block = src[order], dst[order], block[order]
+    counts = np.bincount(block, minlength=rows * cols)
+    e_cap = _round_up(max(int(counts.max()), 1), e_cap_multiple)
+
+    src_l = np.full((rows * cols, e_cap), part.n_c, dtype=np.int32)
+    dst_l = np.full((rows * cols, e_cap), part.n_r, dtype=np.int32)
+    starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    for b in range(rows * cols):
+        s0, cnt = starts[b], counts[b]
+        if cnt == 0:
+            continue
+        i, j = divmod(b, cols)
+        src_l[b, :cnt] = (src[s0 : s0 + cnt] - j * part.n_c).astype(np.int32)
+        dst_l[b, :cnt] = (dst[s0 : s0 + cnt] - i * part.n_r).astype(np.int32)
+
+    return BlockedGraph(
+        part=part,
+        src_local=src_l.reshape(rows, cols, e_cap),
+        dst_local=dst_l.reshape(rows, cols, e_cap),
+        e_counts=counts.reshape(rows, cols),
+        m_input=g.m_input,
+    )

@@ -1,0 +1,148 @@
+"""Graph500 BFS-tree validation — the benchmark's 5 rules (paper Alg. 1 l.5).
+
+Host-side (numpy) so it is independent of the JAX implementation under test.
+The five rules, per the Graph500 specification:
+
+  1. the BFS tree is a tree and does not contain cycles;
+  2. each tree edge connects vertices whose BFS levels differ by exactly one;
+  3. every edge in the input graph connects vertices whose levels differ by
+     at most one, or both endpoints are unreached (same component check);
+  4. the BFS tree spans exactly the connected component of the root;
+  5. a node and its BFS parent are joined by an edge of the original graph.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.graphgen.builder import CSRGraph
+
+
+@dataclasses.dataclass(frozen=True)
+class ValidationResult:
+    ok: bool
+    failures: tuple[str, ...]
+    n_reached: int
+    n_tree_edges: int
+
+    def __bool__(self) -> bool:
+        return self.ok
+
+
+def compute_levels(parent: np.ndarray, root: int, max_iter: int | None = None) -> np.ndarray:
+    """Levels by pointer-jumping over parent links; -2 marks a cycle/overflow."""
+    n = parent.shape[0]
+    level = np.full(n, -1, dtype=np.int64)
+    level[root] = 0
+    reached = parent >= 0
+    frontier = np.array([root])
+    depth = 0
+    max_iter = max_iter or n
+    children = np.argsort(parent[reached], kind="stable")
+    nodes = np.nonzero(reached)[0][children]
+    parents_sorted = parent[nodes]
+    while frontier.size and depth < max_iter:
+        depth += 1
+        lo = np.searchsorted(parents_sorted, frontier, side="left")
+        hi = np.searchsorted(parents_sorted, frontier, side="right")
+        nxt = np.concatenate([nodes[a:b] for a, b in zip(lo, hi)]) if frontier.size else frontier
+        nxt = nxt[level[nxt] < 0]
+        level[nxt] = depth
+        frontier = nxt
+    return level
+
+
+def validate_bfs_tree(
+    g: CSRGraph, parent: np.ndarray, root: int, level: np.ndarray | None = None
+) -> ValidationResult:
+    parent = np.asarray(parent, dtype=np.int64)[: g.n]
+    n = g.n
+    failures: list[str] = []
+
+    reached = parent >= 0
+    if not reached[root] or parent[root] != root:
+        failures.append("rule1: root parent must be root itself")
+
+    lv = compute_levels(parent, root)
+    # Rule 1: no cycles — every reached vertex must get a finite level.
+    stuck = reached & (lv < 0)
+    if stuck.any():
+        failures.append(f"rule1: {int(stuck.sum())} reached vertices not connected to root (cycle)")
+
+    if level is not None:
+        level = np.asarray(level, dtype=np.int64)[:n]
+        mism = reached & (lv >= 0) & (level != lv)
+        if mism.any():
+            failures.append(f"levels: {int(mism.sum())} reported levels disagree with tree depth")
+
+    # Rule 2 & 5: tree edges exist in graph and span exactly one level.
+    tree_v = np.nonzero(reached & (np.arange(n) != root))[0]
+    tree_u = parent[tree_v]
+    if tree_v.size:
+        # membership check via CSR binary search
+        starts, ends = g.row_ptr[tree_u], g.row_ptr[tree_u + 1]
+        exists = np.zeros(tree_v.size, dtype=bool)
+        for k in range(tree_v.size):
+            nbrs = g.col_idx[starts[k] : ends[k]]
+            exists[k] = np.any(nbrs == tree_v[k])
+        if not exists.all():
+            failures.append(f"rule5: {int((~exists).sum())} tree edges missing from graph")
+        dl = lv[tree_v] - lv[tree_u]
+        bad = (lv[tree_v] >= 0) & (lv[tree_u] >= 0) & (dl != 1)
+        if bad.any():
+            failures.append(f"rule2: {int(bad.sum())} tree edges do not span exactly one level")
+
+    # Rule 3: every graph edge spans <= 1 level, both-or-neither reached.
+    eu, ev = g.src.astype(np.int64), g.dst.astype(np.int64)
+    ru, rv = reached[eu], reached[ev]
+    if (ru != rv).any():
+        failures.append(f"rule4: {int((ru != rv).sum())} edges cross the reached boundary")
+    both = ru & rv
+    dl = np.abs(lv[eu[both]] - lv[ev[both]])
+    if (dl > 1).any():
+        failures.append(f"rule3: {int((dl > 1).sum())} graph edges span more than one level")
+
+    # Rule 4: reached set == connected component of root (computed by ref BFS).
+    comp = reference_bfs(g, root) >= 0
+    if (reached != comp).any():
+        failures.append(
+            f"rule4: reached set differs from root component by {int((reached != comp).sum())}"
+        )
+
+    return ValidationResult(
+        ok=not failures,
+        failures=tuple(failures),
+        n_reached=int(reached.sum()),
+        n_tree_edges=int(tree_v.size),
+    )
+
+
+def reference_bfs(g: CSRGraph, root: int) -> np.ndarray:
+    """Plain host BFS returning levels (-1 unreached) — the oracle."""
+    level = np.full(g.n, -1, dtype=np.int64)
+    level[root] = 0
+    frontier = np.array([root], dtype=np.int64)
+    d = 0
+    while frontier.size:
+        d += 1
+        nbr_list = []
+        for v in frontier:
+            nbr_list.append(g.col_idx[g.row_ptr[v] : g.row_ptr[v + 1]])
+        nbrs = np.unique(np.concatenate(nbr_list)) if nbr_list else np.array([], np.int64)
+        nbrs = nbrs[level[nbrs] < 0]
+        level[nbrs] = d
+        frontier = nbrs
+    return level
+
+
+def traversed_edges(g: CSRGraph, parent: np.ndarray) -> int:
+    """TEPS numerator: input edges with both endpoints in the traversed
+    component (Graph500 counts undirected input edges once)."""
+    reached = np.asarray(parent)[: g.n] >= 0
+    # m_input directed input edges were symmetrized; count input edges whose
+    # endpoints are reached.  Approximation per spec: use input edge count
+    # scaled by reached fraction of edges in the CSR.
+    both = reached[g.src] & reached[g.dst]
+    return int(both.sum()) // 2

@@ -1,0 +1,6 @@
+"""Deterministic synthetic data pipelines.
+
+Every pipeline is a pure function of (config, step) so that checkpoint
+restart replays the exact same stream — the determinism half of the fault-
+tolerance story (train/checkpoint.py holds the other half).
+"""

@@ -1,0 +1,16 @@
+"""Synthetic graph + integer-stream generators (paper §2.7, §5.3.2)."""
+
+from repro.graphgen.kronecker import kronecker_edges, rmat_edges
+from repro.graphgen.builder import build_csr, CSRGraph, symmetrize, relabel_by_degree
+from repro.graphgen.zipf import zipf_stream, sorted_id_stream
+
+__all__ = [
+    "kronecker_edges",
+    "rmat_edges",
+    "build_csr",
+    "CSRGraph",
+    "symmetrize",
+    "relabel_by_degree",
+    "zipf_stream",
+    "sorted_id_stream",
+]

@@ -1,0 +1,10 @@
+"""S4-BP128-on-TPU: delta + binary packing of integer streams.
+
+Vertical bit-packing over 1024-integer chunks — the (8,128)-vreg analog of
+Lemire's 4-lane SSE "S4" layout (paper §5.2.B.vii).  ``ref`` is the pure-jnp
+oracle (also the default in-graph implementation), ``bitpack`` the Pallas TPU
+kernel, ``ops`` the jit'd dispatch layer.
+"""
+
+from repro.kernels.bitpack import ops, ref  # noqa: F401
+from repro.kernels.bitpack.ref import B_CLASSES, CHUNK  # noqa: F401

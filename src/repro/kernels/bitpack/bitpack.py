@@ -1,0 +1,88 @@
+"""Pallas TPU kernel for vertical bit packing (S4-BP128 analog).
+
+Each grid step processes ``VALS_PER_BLOCK = 4096`` values — four 1024-value
+chunks laid out as a (32, 128) int32 tile in VMEM — and emits a ``(b, 128)``
+uint32 tile of packed words.  Every shift/OR acts on whole (8,128) vregs
+along the sublane axis; there is no cross-lane traffic for b >= 4 and only
+static in-tile reshapes for b in {1, 2} (see DESIGN.md §3).
+
+Validated in interpret mode against :mod:`repro.kernels.bitpack.ref` over a
+shape x bit-width sweep (tests/test_kernels.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.bitpack.ref import B_CLASSES, CHUNK
+
+VALS_PER_BLOCK = 4096  # 4 chunks = (32, 128) tile
+_ROWS_IN = VALS_PER_BLOCK // 128  # 32
+
+
+def _pack_kernel(v_ref, o_ref, *, b: int):
+    k_per_word = 32 // b
+    wc = 32 * b
+    v = v_ref[...].astype(jnp.uint32)  # (32, 128)
+    chunks = v.reshape(VALS_PER_BLOCK // CHUNK, k_per_word, wc)
+    out = jnp.zeros((VALS_PER_BLOCK // CHUNK, wc), dtype=jnp.uint32)
+    for k in range(k_per_word):
+        out = out | (chunks[:, k, :] << jnp.uint32(k * b))
+    o_ref[...] = out.reshape(b, 128)
+
+
+def _unpack_kernel(w_ref, o_ref, *, b: int):
+    k_per_word = 32 // b
+    wc = 32 * b
+    w = w_ref[...].astype(jnp.uint32).reshape(VALS_PER_BLOCK // CHUNK, 1, wc)
+    shifts = (jnp.arange(k_per_word, dtype=jnp.uint32) * b)[None, :, None]
+    mask = jnp.uint32((1 << b) - 1)
+    vals = (w >> shifts) & mask  # (4, K, wc)
+    o_ref[...] = vals.reshape(_ROWS_IN, 128)
+
+
+@functools.partial(jax.jit, static_argnames=("b", "interpret"))
+def pack_pallas(values: jax.Array, b: int, interpret: bool = True) -> jax.Array:
+    """Pack uint32 values (length multiple of 4096) at width ``b``."""
+    assert b in B_CLASSES, b
+    if b == 32:
+        return values.astype(jnp.uint32)
+    n = values.shape[0]
+    assert n % VALS_PER_BLOCK == 0, n
+    grid = n // VALS_PER_BLOCK
+    v2 = values.astype(jnp.uint32).reshape(n // 128, 128)
+    out = pl.pallas_call(
+        functools.partial(_pack_kernel, b=b),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((_ROWS_IN, 128), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((b, 128), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((grid * b, 128), jnp.uint32),
+        interpret=interpret,
+    )(v2)
+    return out.reshape(-1)
+
+
+@functools.partial(jax.jit, static_argnames=("b", "interpret"))
+def unpack_pallas(words: jax.Array, b: int, interpret: bool = True) -> jax.Array:
+    """Inverse of :func:`pack_pallas`."""
+    assert b in B_CLASSES, b
+    if b == 32:
+        return words.astype(jnp.uint32)
+    nw = words.shape[0]
+    words_per_block = VALS_PER_BLOCK * b // 32  # = 128*b
+    assert nw % words_per_block == 0, nw
+    grid = nw // words_per_block
+    w2 = words.astype(jnp.uint32).reshape(grid * b, 128)
+    out = pl.pallas_call(
+        functools.partial(_unpack_kernel, b=b),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((b, 128), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((_ROWS_IN, 128), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((grid * _ROWS_IN, 128), jnp.uint32),
+        interpret=interpret,
+    )(w2)
+    return out.reshape(-1)

@@ -1,0 +1,54 @@
+"""jit'd dispatch layer for the bitpack kernel.
+
+On TPU the Pallas kernel is used (compiled); elsewhere the pure-jnp oracle —
+the two are bit-identical (tests sweep shapes x widths).  The public API is
+what the compressed collectives call.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bitpack import bitpack, ref
+
+
+def _use_pallas() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def pack(values: jax.Array, b: int) -> jax.Array:
+    if _use_pallas() and values.shape[0] % bitpack.VALS_PER_BLOCK == 0:
+        return bitpack.pack_pallas(values, b, interpret=False)
+    return ref.pack(values, b)
+
+
+def unpack(words: jax.Array, b: int) -> jax.Array:
+    if _use_pallas() and (words.shape[0] * 32 // b) % bitpack.VALS_PER_BLOCK == 0:
+        return bitpack.unpack_pallas(words, b, interpret=False)
+    return ref.unpack(words, b)
+
+
+def pack_sorted_ids(ids: jax.Array, count: jax.Array, b: int) -> jax.Array:
+    """Delta + pack a sorted id stream (paper's frontier codec)."""
+    return pack(ref.gaps_from_sorted(ids, count), b)
+
+
+def unpack_sorted_ids(words: jax.Array, count: jax.Array, b: int, fill: int) -> jax.Array:
+    return ref.sorted_from_gaps(unpack(words, b), count, fill)
+
+
+def compressed_words(capacity: int, b: int) -> int:
+    """Static packed-word count for an id stream of ``capacity`` values."""
+    assert capacity % ref.CHUNK == 0, capacity
+    return capacity * b // 32
+
+
+def compact_ids(mask_bits: jax.Array, capacity: int, fill: int) -> tuple[jax.Array, jax.Array]:
+    """Stream-compact a boolean membership vector into sorted ids + count.
+
+    jnp.nonzero with static ``size`` — jit-safe replacement for the GPU
+    warp-scan compaction the paper's CUDA kernel uses.
+    """
+    (ids,) = jnp.nonzero(mask_bits, size=capacity, fill_value=fill)
+    return ids.astype(jnp.int32), jnp.sum(mask_bits.astype(jnp.int32))

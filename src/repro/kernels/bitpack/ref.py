@@ -1,0 +1,104 @@
+"""Pure-jnp oracle for the TPU bit-packing kernel (static shapes).
+
+Layout ("vertical", per 1024-value chunk): with bit width ``b``, a chunk of
+``CHUNK=1024`` uint32 values packs into ``Wc = 32*b`` words; word ``j`` of a
+chunk holds values ``chunk[k*Wc + j]`` at bit offset ``k*b`` for
+``k in range(32//b)``.  Consecutive *words* therefore take consecutive
+values-strided-by-Wc — every shift/OR is a full-vector op with no cross-lane
+traffic, exactly like Lemire's S4-BP128 SIMD layout (4 lanes there, 8x128
+vregs here).
+
+All functions are shape-static and jit/shard_map-safe: bit width ``b`` and
+capacities are Python ints; runtime values never change shapes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+CHUNK = 1024
+B_CLASSES = (1, 2, 4, 8, 16, 32)  # lane-aligned subset of S4-BP128's 0..32
+
+
+def words_for(n: int, b: int) -> int:
+    """Packed word count for ``n`` values at width ``b`` (n % CHUNK == 0)."""
+    assert n % CHUNK == 0, n
+    return n * b // 32
+
+
+def pack(values: jax.Array, b: int) -> jax.Array:
+    """Pack uint32 ``values`` (< 2**b, length multiple of 1024) at width b."""
+    assert b in B_CLASSES, b
+    values = values.astype(jnp.uint32)
+    if b == 32:
+        return values
+    k_per_word = 32 // b
+    wc = CHUNK // k_per_word  # = 32*b
+    v = values.reshape(-1, k_per_word, wc)
+    out = jnp.zeros((v.shape[0], wc), dtype=jnp.uint32)
+    for k in range(k_per_word):
+        out = out | (v[:, k, :] << jnp.uint32(k * b))
+    return out.reshape(-1)
+
+
+def unpack(words: jax.Array, b: int) -> jax.Array:
+    """Inverse of :func:`pack`; output length = words.size * 32 // b."""
+    assert b in B_CLASSES, b
+    words = words.astype(jnp.uint32)
+    if b == 32:
+        return words
+    k_per_word = 32 // b
+    wc = 32 * b
+    w = words.reshape(-1, 1, wc)
+    shifts = (jnp.arange(k_per_word, dtype=jnp.uint32) * b)[None, :, None]
+    mask = jnp.uint32((1 << b) - 1)
+    vals = (w >> shifts) & mask
+    return vals.reshape(-1)
+
+
+# ---------------------------------------------------------------------------
+# delta (gap) coding of sorted id streams — fused with pack/unpack in-kernel
+# ---------------------------------------------------------------------------
+
+
+def gaps_from_sorted(ids: jax.Array, count: jax.Array) -> jax.Array:
+    """Sorted ids (padded to static capacity) -> non-negative gaps.
+
+    ``gaps[0] = ids[0]`` (absolute), ``gaps[i] = ids[i] - ids[i-1]``;
+    positions >= count are zero.  ``count`` is a traced scalar.
+    """
+    cap = ids.shape[0]
+    idx = jnp.arange(cap, dtype=jnp.int32)
+    # Repeat the last valid id into the padding so padded gaps are zero.
+    ids_m = ids[jnp.clip(jnp.minimum(idx, count - 1), 0, cap - 1)]
+    prev = jnp.concatenate([jnp.zeros((1,), ids_m.dtype), ids_m[:-1]])
+    gaps = jnp.where(idx < count, ids_m - prev, 0)
+    return gaps.astype(jnp.uint32)
+
+
+def sorted_from_gaps(gaps: jax.Array, count: jax.Array, fill: int) -> jax.Array:
+    """Inverse of :func:`gaps_from_sorted`; padding positions get ``fill``."""
+    ids = jnp.cumsum(gaps.astype(jnp.uint32), dtype=jnp.uint32).astype(jnp.int32)
+    idx = jnp.arange(gaps.shape[0], dtype=jnp.int32)
+    return jnp.where(idx < count, ids, jnp.int32(fill))
+
+
+def required_width_class(gaps: jax.Array) -> jax.Array:
+    """Smallest index into B_CLASSES whose width covers max(gaps) (traced)."""
+    m = jnp.max(gaps).astype(jnp.uint32)
+    cls = jnp.int32(len(B_CLASSES) - 1)
+    for i in range(len(B_CLASSES) - 2, -1, -1):
+        fits = m < jnp.uint32(1 << B_CLASSES[i])
+        cls = jnp.where(fits, jnp.int32(i), cls)
+    return cls
+
+
+def pack_sorted_ids(ids: jax.Array, count: jax.Array, b: int) -> jax.Array:
+    """Fused delta + pack of a sorted id stream (the paper's codec)."""
+    return pack(gaps_from_sorted(ids, count), b)
+
+
+def unpack_sorted_ids(words: jax.Array, count: jax.Array, b: int, fill: int) -> jax.Array:
+    """Fused unpack + prefix-sum back to sorted ids."""
+    return sorted_from_gaps(unpack(words, b), count, fill)

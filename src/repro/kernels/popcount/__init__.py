@@ -1,0 +1,9 @@
+"""Bitmap popcount kernel (paper §3.1 "Sparse vector with pop counting").
+
+The CUDA ``__popc`` bitmap trick has no per-lane TPU analogue; the
+TPU-idiomatic equivalent is a vectorized SWAR popcount over (8,128) uint32
+tiles reduced in VMEM.  Used for frontier-size statistics that drive the
+bucket selection and compression-threshold policy.
+"""
+
+from repro.kernels.popcount import ops, ref  # noqa: F401

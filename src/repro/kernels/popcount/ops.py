@@ -1,0 +1,19 @@
+"""Dispatch layer for the popcount kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.popcount import popcount, ref
+
+
+def popcount_blocks(words: jax.Array) -> jax.Array:
+    if jax.default_backend() == "tpu" and words.shape[0] % popcount.WORDS_PER_BLOCK == 0:
+        return popcount.popcount_blocks_pallas(words, interpret=False)
+    blocks = words.reshape(-1, min(words.shape[0], popcount.WORDS_PER_BLOCK))
+    return jnp.sum(ref.popcount_words(blocks), axis=1)
+
+
+popcount_words = ref.popcount_words
+popcount_total = ref.popcount_total

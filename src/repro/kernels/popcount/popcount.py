@@ -1,0 +1,43 @@
+"""Pallas TPU kernel: blocked SWAR popcount with in-VMEM reduction.
+
+Grid step = (8, 128) uint32 tile -> one int32 partial count. The SWAR adds
+and the tree reduction happen in VMEM; HBM traffic is exactly one read of
+the bitmap plus a (grid,) int32 write.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = (8, 128)
+WORDS_PER_BLOCK = TILE[0] * TILE[1]
+
+
+def _popcount_kernel(w_ref, o_ref):
+    v = w_ref[...].astype(jnp.uint32)
+    v = v - ((v >> 1) & jnp.uint32(0x55555555))
+    v = (v & jnp.uint32(0x33333333)) + ((v >> 2) & jnp.uint32(0x33333333))
+    v = (v + (v >> 4)) & jnp.uint32(0x0F0F0F0F)
+    counts = ((v * jnp.uint32(0x01010101)) >> 24).astype(jnp.int32)
+    o_ref[...] = jnp.sum(counts).reshape(1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def popcount_blocks_pallas(words: jax.Array, interpret: bool = True) -> jax.Array:
+    """Per-1024-word-block popcounts; words length % 1024 == 0."""
+    n = words.shape[0]
+    assert n % WORDS_PER_BLOCK == 0, n
+    grid = n // WORDS_PER_BLOCK
+    w2 = words.astype(jnp.uint32).reshape(n // TILE[1], TILE[1])
+    return pl.pallas_call(
+        _popcount_kernel,
+        grid=(grid,),
+        in_specs=[pl.BlockSpec(TILE, lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((grid,), jnp.int32),
+        interpret=interpret,
+    )(w2)

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle: SWAR popcount of a uint32 word stream."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def popcount_words(words: jax.Array) -> jax.Array:
+    """Per-word bit counts (uint32 -> int32)."""
+    v = words.astype(jnp.uint32)
+    v = v - ((v >> 1) & jnp.uint32(0x55555555))
+    v = (v & jnp.uint32(0x33333333)) + ((v >> 2) & jnp.uint32(0x33333333))
+    v = (v + (v >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return ((v * jnp.uint32(0x01010101)) >> 24).astype(jnp.int32)
+
+
+def popcount_total(words: jax.Array) -> jax.Array:
+    return jnp.sum(popcount_words(words))

@@ -1,0 +1,9 @@
+"""Int8 block quantization kernel (gradient / payload compression).
+
+Beyond-paper extension of the compression idea to *lossy* float payloads:
+per-128-value max-abs scales, symmetric int8.  Used by
+``optim/grad_compress.py`` (error-feedback DP gradient sync) and by the
+optional quantized MoE dispatch / embedding exchange.
+"""
+
+from repro.kernels.quant import ops, ref  # noqa: F401

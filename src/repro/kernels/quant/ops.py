@@ -1,0 +1,16 @@
+"""Dispatch layer for the int8 quant kernel."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.quant import quant, ref
+
+
+def quantize(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    if jax.default_backend() == "tpu" and x.shape[0] % (quant.ROWS * ref.GROUP) == 0:
+        return quant.quantize_pallas(x, interpret=False)
+    return ref.quantize(x)
+
+
+dequantize = ref.dequantize

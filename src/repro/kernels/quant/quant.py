@@ -1,0 +1,49 @@
+"""Pallas TPU kernel: fused block-quantize (max-abs scale + round to int8).
+
+Grid step = (8, 128) float32 tile -> (8, 128) int8 tile + (8,) row scales.
+The reduction (max-abs) and the elementwise scale/round stay in VMEM; on TPU
+this is one VPU pass instead of XLA's reduce + broadcast + round chain.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.quant.ref import GROUP
+
+ROWS = 8  # rows per grid step
+
+
+def _quant_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)  # (8, 128)
+    scale = jnp.max(jnp.abs(x), axis=1) / 127.0  # (8,)
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q_ref[...] = jnp.clip(jnp.round(x / safe[:, None]), -127, 127).astype(jnp.int8)
+    s_ref[...] = scale
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def quantize_pallas(x: jax.Array, interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+    n = x.shape[0]
+    assert n % (ROWS * GROUP) == 0, n
+    grid = n // (ROWS * GROUP)
+    x2 = x.astype(jnp.float32).reshape(n // GROUP, GROUP)
+    q, s = pl.pallas_call(
+        _quant_kernel,
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((ROWS, GROUP), lambda i: (i, 0))],
+        out_specs=(
+            pl.BlockSpec((ROWS, GROUP), lambda i: (i, 0)),
+            pl.BlockSpec((ROWS,), lambda i: (i,)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((n // GROUP, GROUP), jnp.int8),
+            jax.ShapeDtypeStruct((n // GROUP,), jnp.float32),
+        ),
+        interpret=interpret,
+    )(x2)
+    return q.reshape(-1), s

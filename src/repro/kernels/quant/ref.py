@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for int8 block quantization."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+GROUP = 128  # values per scale group (one lane row)
+
+
+def quantize(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """x (N,) float -> (q int8 (N,), scales f32 (N/GROUP,)). N % GROUP == 0."""
+    n = x.shape[0]
+    assert n % GROUP == 0, n
+    g = x.astype(jnp.float32).reshape(-1, GROUP)
+    scale = jnp.max(jnp.abs(g), axis=1) / 127.0
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round(g / safe[:, None]), -127, 127).astype(jnp.int8)
+    return q.reshape(-1), scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array, dtype=jnp.float32) -> jax.Array:
+    g = q.astype(jnp.float32).reshape(-1, GROUP) * scale[:, None]
+    return g.reshape(-1).astype(dtype)

@@ -1,0 +1,10 @@
+"""Blocked ELL SpMV kernel: the BFS frontier-expansion hot spot.
+
+The paper's §6 hand-optimizes exactly this loop with CPU SIMD (strength
+reduction, vectorization of the matrix iteration).  The TPU analog: the
+destination-major ELL neighbor tile streams through VMEM, the frontier
+bitmap stays VMEM-resident, and the candidate-parent min-reduction runs on
+the VPU — one (8,128) tile of destinations per grid step per degree chunk.
+"""
+
+from repro.kernels.spmv import ops, ref  # noqa: F401

@@ -1,0 +1,18 @@
+"""Dispatch layer for the ELL SpMV kernel."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.spmv import ref, spmv
+
+
+def spmv_min(nbr: jax.Array, f_words: jax.Array, n_cols: int) -> jax.Array:
+    n_rows, max_deg = nbr.shape
+    if (
+        jax.default_backend() == "tpu"
+        and n_rows % spmv.ROW_TILE == 0
+        and max_deg % spmv.DEG_CHUNK == 0
+    ):
+        return spmv.spmv_min_pallas(nbr, f_words, n_cols, interpret=False)
+    return ref.spmv_min(nbr, f_words, n_cols)

@@ -1,0 +1,55 @@
+"""Pure-jnp oracle for the ELL frontier-expansion SpMV.
+
+Semantics (min-parent semiring over the boolean frontier):
+
+    out[r] = min over d of ( nbr[r, d]  if frontier[nbr[r, d]] else INF )
+
+``nbr``: (n_rows, max_deg) int32 destination-major neighbor lists, padded
+with ``n_cols`` (which always misses the frontier).  ``frontier``: bitmap
+of n_cols bits packed into uint32 words (vertical width-1 layout of
+kernels/bitpack).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+INF = jnp.iinfo(jnp.int32).max
+
+
+def ell_from_coo(src, dst, n_rows: int, n_cols: int, max_deg: int):
+    """Host-free COO->ELL conversion (jnp; for tests and small blocks)."""
+    order = jnp.argsort(dst)
+    src_s, dst_s = src[order], dst[order]
+    # position of each edge within its destination row
+    ones = jnp.ones_like(dst_s)
+    pos = jax.ops.segment_sum(ones, dst_s, num_segments=n_rows + 1)
+    # recompute per-edge rank via cumsum trick
+    idx = jnp.arange(dst_s.shape[0])
+    row_start = jnp.concatenate([jnp.zeros(1, jnp.int32), jnp.cumsum(pos)[:-1].astype(jnp.int32)])
+    rank = idx - row_start[jnp.minimum(dst_s, n_rows)]
+    nbr = jnp.full((n_rows + 1, max_deg), n_cols, jnp.int32)
+    valid = (rank < max_deg) & (dst_s < n_rows)
+    nbr = nbr.at[jnp.where(valid, dst_s, n_rows), jnp.where(valid, rank, 0)].set(
+        jnp.where(valid, src_s, n_cols).astype(jnp.int32)
+    )
+    return nbr[:n_rows]
+
+
+def frontier_bit(words: jax.Array, idx: jax.Array, n_cols: int) -> jax.Array:
+    """Test membership bits for (possibly out-of-range) indices."""
+    safe = jnp.minimum(idx, n_cols - 1)
+    chunk, within = safe // 1024, safe % 1024
+    w = words[chunk * 32 + within % 32]  # vertical b=1 layout: word j of chunk
+    # vertical layout: value i at word (i % 32b=32) shift (i // 32): see bitpack
+    shift = within // 32
+    bit = (w >> shift) & jnp.uint32(1)
+    return (bit == 1) & (idx < n_cols)
+
+
+def spmv_min(nbr: jax.Array, f_words: jax.Array, n_cols: int) -> jax.Array:
+    """out (n_rows,) int32 = min frontier neighbor id per row (INF if none)."""
+    hit = frontier_bit(f_words, nbr, n_cols)
+    cand = jnp.where(hit, nbr, INF)
+    return jnp.min(cand, axis=1)

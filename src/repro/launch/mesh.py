@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches
+jax device state): 16x16 = 256 chips single pod, (2,16,16) = 512 chips for
+the two-pod configuration.  The BFS grid folds ("pod","data") into its row
+axis, so the same mesh serves models (FSDP x TP) and the paper's 2D graph
+partition.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def fsdp_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:
+    """Data-parallel / FSDP axes = everything except the tensor axis."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def grid_rows_cols(mesh: jax.sharding.Mesh) -> tuple[int, int]:
+    """BFS / 2D-GNN grid geometry: rows = product of FSDP axes, cols = TP."""
+    rows = 1
+    for a in fsdp_axes(mesh):
+        rows *= mesh.shape[a]
+    return rows, mesh.shape["model"]

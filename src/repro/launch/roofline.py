@@ -1,0 +1,208 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds (EXPERIMENTS.md §Roofline):
+
+    compute    = HLO_FLOPs / (chips x peak_FLOPs)
+    memory     = HLO_bytes / (chips x HBM_bw)
+    collective = collective_bytes / (chips x link_bw)
+
+Hardware: TPU v5e — 197 TFLOP/s bf16/chip, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+Caveats handled here:
+
+* ``cost_analysis`` visits every op ONCE — while-loop bodies (scan over
+  layers, BFS levels) are not multiplied by trip count.  We parse the HLO,
+  attribute ops to computations, discover while-body computations from the
+  ``while(... body=%B)`` ops, and scale both FLOPs/bytes heuristics and
+  collective bytes by a caller-supplied ``loop_mult`` for ops inside them.
+* collective bytes are not in cost_analysis at all: we sum the result-shape
+  bytes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+  collective-permute in the (SPMD, per-device) module; all-reduce counts
+  2x (reduce + broadcast phases of a ring).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes / s / chip
+LINK_BW = 50e9  # bytes / s / link (ICI)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*((?:\(|\w)[^=]*?)\s*(all-gather|all-reduce|reduce-scatter|"
+    r"all-to-all|collective-permute)(?:-start|-done)?\("
+)
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{")
+_WHILE_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of an HLO type string (handles tuples)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    per_op: dict[str, int]  # op kind -> per-device bytes (loop-scaled)
+    total_bytes: int
+    n_ops: int
+
+    def breakdown(self) -> str:
+        return ", ".join(f"{k}:{v / 1e6:.1f}MB" for k, v in sorted(self.per_op.items()))
+
+
+_NAME_REF_RE = re.compile(r"%([\w\.\-]+)")
+
+
+def parse_collectives(hlo_text: str, loop_mult: float = 1.0) -> CollectiveStats:
+    """Sum collective result bytes from SPMD HLO text.
+
+    loop_mult multiplies ops *transitively reachable* from a while-body
+    computation (scan bodies, and the conditional branches / fusions /
+    reducers they call) — discovered by building the computation call graph
+    from %name references."""
+    # pass 1: computation spans, per-computation collectives, call edges
+    comp_ops: dict[str, list[tuple[str, int]]] = {}
+    comp_edges: dict[str, set[str]] = {}
+    bodies: set[str] = set()
+    comp_names: set[str] = set()
+    current = ""
+    lines = hlo_text.splitlines()
+    for line in lines:
+        if line and not line.startswith(" "):
+            mc = _COMP_RE.match(line.strip())
+            if mc:
+                current = mc.group(1)
+                comp_names.add(current)
+                comp_ops.setdefault(current, [])
+                comp_edges.setdefault(current, set())
+                continue
+        if not current:
+            continue
+        if " while(" in line or "=while(" in line:
+            m = _WHILE_BODY_RE.search(line)
+            if m:
+                bodies.add(m.group(1))
+        m = _OP_RE.search(line)
+        if m:
+            b = _shape_bytes(m.group(1))
+            if m.group(2) == "all-reduce":
+                b *= 2  # ring all-reduce moves ~2x the operand
+            comp_ops[current].append((m.group(2), b))
+        for ref in _NAME_REF_RE.findall(line):
+            comp_edges[current].add(ref)
+
+    # pass 2: computations transitively reachable from any while body
+    scaled: set[str] = set()
+    stack = [b for b in bodies]
+    while stack:
+        c = stack.pop()
+        if c in scaled or c not in comp_ops:
+            continue
+        scaled.add(c)
+        stack.extend(e for e in comp_edges.get(c, ()) if e in comp_names)
+
+    per_op: dict[str, int] = {}
+    n_ops = 0
+    for comp, ops in comp_ops.items():
+        mult = loop_mult if comp in scaled else 1.0
+        for kind, b in ops:
+            per_op[kind] = per_op.get(kind, 0) + int(b * mult)
+            n_ops += 1
+    return CollectiveStats(per_op=per_op, total_bytes=sum(per_op.values()), n_ops=n_ops)
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    hlo_flops: float  # loop-scaled, per device
+    hlo_bytes: float
+    collective_bytes: float
+    model_flops: float  # analytic (6ND etc.), GLOBAL
+    chips: int
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)  # type: ignore[arg-type]
+
+    @property
+    def useful_flop_ratio(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs x chips): remat/dispatch/mask waste."""
+        total_hlo = self.hlo_flops * self.chips
+        return self.model_flops / total_hlo if total_hlo else 0.0
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute roofline fraction if the program ran at its bound:
+        (MODEL_FLOPS / peak-of-all-chips) / bound-time."""
+        ideal_s = self.model_flops / (self.chips * PEAK_FLOPS)
+        return ideal_s / self.bound_s if self.bound_s else 0.0
+
+
+def terms_from_compiled(
+    compiled,
+    chips: int,
+    model_flops: float,
+    loop_mult: float = 1.0,
+    hlo_text: str | None = None,
+) -> RooflineTerms:
+    """Derive the three terms from a compiled executable.
+
+    FLOPs/bytes: cost_analysis counts while bodies once; we approximate the
+    loop-scaled totals by multiplying the WHOLE program cost by loop_mult
+    when the dominant cost sits inside the loop (scan-over-layers LMs, BFS)
+    — callers pass loop_mult = n_layers (or expected BFS levels).  The
+    top-level (embedding/head) contribution is small by comparison and this
+    keeps the estimate conservative (over-counts slightly).
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):  # older jax returns [dict]
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0)) * loop_mult
+    bytes_ = float(ca.get("bytes accessed", 0.0)) * loop_mult
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = parse_collectives(text, loop_mult=loop_mult)
+    return RooflineTerms(
+        compute_s=flops / PEAK_FLOPS,
+        memory_s=bytes_ / HBM_BW,
+        collective_s=coll.total_bytes / LINK_BW,
+        hlo_flops=flops,
+        hlo_bytes=bytes_,
+        collective_bytes=coll.total_bytes,
+        model_flops=model_flops,
+        chips=chips,
+    )

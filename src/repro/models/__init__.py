@@ -1,0 +1,10 @@
+"""Model zoo: every assigned architecture family as composable JAX modules.
+
+* :mod:`repro.models.transformer` — decoder LMs (dense / GQA / MQA / MLA /
+  fine-grained MoE), scan-over-layers, blockwise attention, KV-cache serving.
+* :mod:`repro.models.gnn` — segment_sum message passing: GCN-style sum
+  aggregation, GAT attention aggregation, EGNN E(n) coordinate updates,
+  NequIP-style l<=2 tensor products, GraphCast encode-process-decode.
+* :mod:`repro.models.recsys` — AutoInt: EmbeddingBag (take + segment_sum)
+  over sharded tables + self-attention feature interaction.
+"""

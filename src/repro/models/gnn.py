@@ -1,0 +1,387 @@
+"""Graph neural networks via segment_sum message passing (no sparse formats).
+
+JAX has no CSR/EmbeddingBag/SpMM primitives: every aggregator here is a
+gather over an edge index followed by ``jax.ops.segment_{sum,max,min}`` over
+destinations — this IS the system (see kernel taxonomy §GNN).  Padding edges
+use the sentinel (src = dst = n) and fall into segment n, which is dropped.
+
+Architectures (assigned pool):
+* ``graphcast``  — encode-process-decode stack of interaction networks
+                   (edge MLP + node MLP + residual), sum aggregation.
+* ``gat-cora``   — multi-head attention aggregation (SDDMM -> edge softmax
+                   -> SpMM, all as segment ops).
+* ``egnn``       — E(n)-equivariant: messages from invariants (h_i, h_j,
+                   |x_i - x_j|^2), coordinate updates along displacements.
+* ``nequip``     — E(3)-equivariant l<=2 tensor-product convolutions
+                   (see repro.models.irreps).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import irreps as ir
+
+Params = dict[str, Any]
+
+
+class Graph(NamedTuple):
+    """Static-shape graph batch. Padding edges: src = dst = n."""
+
+    nf: jax.Array  # (n, d_in) node features
+    src: jax.Array  # (m,) int32
+    dst: jax.Array  # (m,) int32
+    pos: jax.Array | None = None  # (n, 3) coordinates (EGNN / NequIP)
+
+    @property
+    def n(self) -> int:
+        return self.nf.shape[0]
+
+    @property
+    def m(self) -> int:
+        return self.src.shape[0]
+
+
+def seg_sum(vals, seg, n):
+    return jax.ops.segment_sum(vals, seg, num_segments=n + 1)[:n]
+
+
+def seg_max(vals, seg, n):
+    return jax.ops.segment_max(vals, seg, num_segments=n + 1)[:n]
+
+
+def segment_softmax(logits, seg, n):
+    """Numerically stable softmax over edges grouped by destination."""
+    mx = seg_max(logits, seg, n)
+    mx_full = jnp.concatenate([mx, jnp.zeros_like(mx[:1])])
+    e = jnp.exp(logits - mx_full[jnp.minimum(seg, n)])
+    denom = seg_sum(e, seg, n)
+    denom_full = jnp.concatenate([denom, jnp.ones_like(denom[:1])])
+    return e / jnp.maximum(denom_full[jnp.minimum(seg, n)], 1e-16)
+
+
+def _mlp_params(key, dims, dtype=jnp.float32):
+    ks = jax.random.split(key, len(dims) - 1)
+    return [
+        {
+            "w": (jax.random.normal(k, (a, b)) / a**0.5).astype(dtype),
+            "b": jnp.zeros((b,), dtype),
+        }
+        for k, a, b in zip(ks, dims[:-1], dims[1:])
+    ]
+
+
+def _mlp(params, x):
+    for i, lyr in enumerate(params):
+        x = x @ lyr["w"] + lyr["b"]
+        if i < len(params) - 1:
+            x = jax.nn.silu(x)
+    return x
+
+
+def _gather(h, idx, n):
+    """Sentinel-safe node gather (idx == n -> zeros)."""
+    hz = jnp.concatenate([h, jnp.zeros_like(h[:1])], axis=0)
+    return hz[jnp.minimum(idx, n)]
+
+
+# ---------------------------------------------------------------------------
+# GraphCast-style interaction networks (encode-process-decode)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphCastConfig:
+    name: str = "graphcast"
+    n_layers: int = 16
+    d_hidden: int = 512
+    d_in: int = 227  # n_vars
+    d_out: int = 227
+    mesh_refinement: int = 6
+    edge_state: bool = True  # persistent edge features (off in the 2D path)
+
+
+def init_graphcast(cfg: GraphCastConfig, key) -> Params:
+    ks = jax.random.split(key, 2 * cfg.n_layers + 2)
+    d = cfg.d_hidden
+    return {
+        "encoder": _mlp_params(ks[0], (cfg.d_in, d, d)),
+        "layers": [
+            {
+                "edge": _mlp_params(ks[2 * i + 1], (3 * d, d, d)),
+                "node": _mlp_params(ks[2 * i + 2], (2 * d, d, d)),
+            }
+            for i in range(cfg.n_layers)
+        ],
+        "decoder": _mlp_params(ks[-1], (d, d, cfg.d_out)),
+    }
+
+
+def graphcast_forward(cfg: GraphCastConfig, params: Params, g: Graph) -> jax.Array:
+    n = g.n
+    h = _mlp(params["encoder"], g.nf)
+    ef = jnp.zeros((g.m, cfg.d_hidden), h.dtype)
+    valid = (g.src < n)[:, None]
+    for lyr in params["layers"]:
+        hs, hd = _gather(h, g.src, n), _gather(h, g.dst, n)
+        msg = _mlp(lyr["edge"], jnp.concatenate([ef, hs, hd], -1)) * valid
+        if cfg.edge_state:
+            ef = ef + msg
+            msg = ef
+        agg = seg_sum(msg, g.dst, n)
+        h = h + _mlp(lyr["node"], jnp.concatenate([h, agg], -1))
+    return _mlp(params["decoder"], h)
+
+
+# ---------------------------------------------------------------------------
+# GAT (attention aggregation)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class GATConfig:
+    name: str = "gat-cora"
+    n_layers: int = 2
+    d_hidden: int = 8  # per head
+    n_heads: int = 8
+    d_in: int = 1433
+    d_out: int = 7
+    negative_slope: float = 0.2
+
+
+def init_gat(cfg: GATConfig, key) -> Params:
+    ks = jax.random.split(key, 3 * cfg.n_layers)
+    layers = []
+    d_prev = cfg.d_in
+    for i in range(cfg.n_layers):
+        last = i == cfg.n_layers - 1
+        heads = 1 if last else cfg.n_heads
+        d_out = cfg.d_out if last else cfg.d_hidden
+        layers.append(
+            {
+                "w": (
+                    jax.random.normal(ks[3 * i], (heads, d_prev, d_out)) / d_prev**0.5
+                ).astype(jnp.float32),
+                "a_src": jax.random.normal(ks[3 * i + 1], (heads, d_out)) * 0.1,
+                "a_dst": jax.random.normal(ks[3 * i + 2], (heads, d_out)) * 0.1,
+            }
+        )
+        d_prev = heads * d_out
+    return {"layers": layers}
+
+
+def gat_forward(cfg: GATConfig, params: Params, g: Graph) -> jax.Array:
+    n, h = g.n, g.nf
+    for i, lyr in enumerate(params["layers"]):
+        heads = lyr["w"].shape[0]
+        z = jnp.einsum("nd,hdo->nho", h, lyr["w"])  # (n, heads, d_out)
+        # SDDMM: per-edge attention logits
+        zs, zd = _gather(z, g.src, n), _gather(z, g.dst, n)
+        logits = jnp.einsum("mho,ho->mh", zs, lyr["a_src"]) + jnp.einsum(
+            "mho,ho->mh", zd, lyr["a_dst"]
+        )
+        logits = jax.nn.leaky_relu(logits, cfg.negative_slope)
+        logits = jnp.where((g.src < n)[:, None], logits, -1e30)
+        alpha = jax.vmap(lambda l: segment_softmax(l, g.dst, n), 1, 1)(logits)
+        msg = alpha[..., None] * zs  # (m, heads, d_out)
+        agg = seg_sum(msg.reshape(g.m, -1), g.dst, n).reshape(n, heads, -1)
+        h = agg.reshape(n, -1)
+        if i < len(params["layers"]) - 1:
+            h = jax.nn.elu(h)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# EGNN (E(n)-equivariant)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class EGNNConfig:
+    name: str = "egnn"
+    n_layers: int = 4
+    d_hidden: int = 64
+    d_in: int = 16
+    d_out: int = 16
+
+
+def init_egnn(cfg: EGNNConfig, key) -> Params:
+    ks = jax.random.split(key, 3 * cfg.n_layers + 2)
+    d = cfg.d_hidden
+    return {
+        "embed": _mlp_params(ks[0], (cfg.d_in, d)),
+        "layers": [
+            {
+                "edge": _mlp_params(ks[3 * i + 1], (2 * d + 1, d, d)),
+                "coord": _mlp_params(ks[3 * i + 2], (d, d, 1)),
+                "node": _mlp_params(ks[3 * i + 3], (2 * d, d, d)),
+            }
+            for i in range(cfg.n_layers)
+        ],
+        "out": _mlp_params(ks[-1], (d, cfg.d_out)),
+    }
+
+
+def egnn_forward(cfg: EGNNConfig, params: Params, g: Graph):
+    """Returns (node outputs (n, d_out), updated coordinates (n, 3))."""
+    assert g.pos is not None
+    n = g.n
+    h = _mlp(params["embed"], g.nf)
+    x = g.pos
+    valid = (g.src < n)[:, None]
+    for lyr in params["layers"]:
+        hs, hd = _gather(h, g.src, n), _gather(h, g.dst, n)
+        xs, xd = _gather(x, g.src, n), _gather(x, g.dst, n)
+        diff = xd - xs
+        d2 = jnp.sum(diff * diff, -1, keepdims=True)
+        m_ij = _mlp(lyr["edge"], jnp.concatenate([hs, hd, d2], -1)) * valid
+        # E(n) coordinate update: x_i += mean_j (x_i - x_j) * phi_x(m_ij)
+        w = jnp.tanh(_mlp(lyr["coord"], m_ij))  # bounded for stability
+        deg = jnp.maximum(seg_sum(valid.astype(x.dtype), g.dst, n), 1.0)
+        x = x + seg_sum(-diff * w * valid, g.dst, n) / deg
+        agg = seg_sum(m_ij, g.dst, n)
+        h = h + _mlp(lyr["node"], jnp.concatenate([h, agg], -1))
+    return _mlp(params["out"], h), x
+
+
+# ---------------------------------------------------------------------------
+# NequIP (E(3)-equivariant tensor-product convolutions, l <= 2)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class NequIPConfig:
+    name: str = "nequip"
+    n_layers: int = 5
+    d_hidden: int = 32  # channels per l
+    l_max: int = 2
+    n_rbf: int = 8
+    cutoff: float = 5.0
+    d_in: int = 16  # species embedding width
+    d_out: int = 1  # per-atom energy
+
+
+def init_nequip(cfg: NequIPConfig, key) -> Params:
+    c = cfg.d_hidden
+    ks = jax.random.split(key, 8 * cfg.n_layers + 2)
+    k = iter(ks)
+    layers = []
+    for _ in range(cfg.n_layers):
+        layers.append(
+            {
+                # radial MLP -> per-path weights (3 paths x channels)
+                "radial": _mlp_params(next(k), (cfg.n_rbf, c, 3 * c)),
+                "w_s": jax.random.normal(next(k), (c, c)) / c**0.5,
+                "w_v": jax.random.normal(next(k), (c, c)) / c**0.5,
+                "w_t": jax.random.normal(next(k), (c, c)) / c**0.5,
+                "gate": _mlp_params(next(k), (c, 2 * c)),
+            }
+        )
+    return {
+        "embed": _mlp_params(next(k), (cfg.d_in, c)),
+        "layers": layers,
+        "readout": _mlp_params(next(k), (c, c, cfg.d_out)),
+    }
+
+
+def nequip_forward(cfg: NequIPConfig, params: Params, g: Graph) -> jax.Array:
+    """Per-node scalar outputs (invariant); internal features are l<=2."""
+    assert g.pos is not None
+    n, c = g.n, cfg.d_hidden
+    feats = ir.Irreps(
+        s=_mlp(params["embed"], g.nf),
+        v=jnp.zeros((n, c, 3)),
+        t=jnp.zeros((n, c, 3, 3)),
+    )
+    valid_e = g.src < n
+    xs, xd = _gather(g.pos, g.src, n), _gather(g.pos, g.dst, n)
+    disp = xd - xs
+    r = jnp.sqrt(jnp.sum(disp * disp, -1) + 1e-12)
+    rhat = disp / r[:, None]
+    y1 = ir.sph_l1(rhat)  # (m, 3)
+    y2 = ir.sph_l2(rhat)  # (m, 3, 3)
+    rbf = ir.bessel_rbf(r, cfg.n_rbf, cfg.cutoff) * valid_e[:, None]
+
+    for lyr in params["layers"]:
+        w = _mlp(lyr["radial"], rbf)  # (m, 3c)
+        w0, w1, w2 = w[:, :c], w[:, c : 2 * c], w[:, 2 * c :]
+        hs = ir.Irreps(
+            s=_gather(feats.s, g.src, n),
+            v=_gather(feats.v.reshape(n, -1), g.src, n).reshape(-1, c, 3),
+            t=_gather(feats.t.reshape(n, -1), g.src, n).reshape(-1, c, 3, 3),
+        )
+        # tensor-product messages: neighbor features (x) SH(rhat), radial-weighted
+        m_s = w0 * (hs.s + ir.p_vv_s(hs.v, y1[:, None, :]))  # 0x0->0, 1x1->0
+        m_v = w1[..., None] * (
+            hs.s[..., None] * y1[:, None, :]  # 0x1->1
+            + hs.v  # 0(r)x1 identity path
+            + ir.p_tv_v(hs.t, y1[:, None, :])  # 2x1->1
+        )
+        m_t = w2[..., None, None] * (
+            hs.s[..., None, None] * y2[:, None]  # 0x2->2
+            + ir.p_vv_t(hs.v, y1[:, None, :])  # 1x1->2
+            + hs.t  # identity path
+        )
+        agg = ir.Irreps(
+            s=seg_sum(m_s, g.dst, n),
+            v=seg_sum(m_v.reshape(g.m, -1), g.dst, n).reshape(n, c, 3),
+            t=seg_sum(m_t.reshape(g.m, -1), g.dst, n).reshape(n, c, 3, 3),
+        )
+        mixed = ir.linear(agg, lyr["w_s"], lyr["w_v"], lyr["w_t"])
+        gates = _mlp(lyr["gate"], mixed.s)
+        out = ir.gate(mixed, gates[:, :c], gates[:, c:])
+        feats = ir.Irreps(
+            s=feats.s + out.s, v=feats.v + out.v, t=feats.t + out.t
+        )
+    return _mlp(params["readout"], feats.s)
+
+
+# ---------------------------------------------------------------------------
+# unified facade used by configs / dryrun
+# ---------------------------------------------------------------------------
+
+
+def init(cfg, key) -> Params:
+    if isinstance(cfg, GraphCastConfig):
+        return init_graphcast(cfg, key)
+    if isinstance(cfg, GATConfig):
+        return init_gat(cfg, key)
+    if isinstance(cfg, EGNNConfig):
+        return init_egnn(cfg, key)
+    if isinstance(cfg, NequIPConfig):
+        return init_nequip(cfg, key)
+    raise TypeError(type(cfg))
+
+
+def forward(cfg, params: Params, g: Graph) -> jax.Array:
+    if isinstance(cfg, GraphCastConfig):
+        return graphcast_forward(cfg, params, g)
+    if isinstance(cfg, GATConfig):
+        return gat_forward(cfg, params, g)
+    if isinstance(cfg, EGNNConfig):
+        return egnn_forward(cfg, params, g)[0]
+    if isinstance(cfg, NequIPConfig):
+        return nequip_forward(cfg, params, g)
+    raise TypeError(type(cfg))
+
+
+def loss_fn(cfg, params: Params, batch) -> jax.Array:
+    """Node-level loss: cross-entropy when integer targets, else MSE."""
+    g: Graph = batch["graph"]
+    out = forward(cfg, params, g)
+    tgt = batch["targets"]
+    mask = batch.get("mask")
+    if jnp.issubdtype(tgt.dtype, jnp.integer):
+        logp = jax.nn.log_softmax(out.astype(jnp.float32), -1)
+        nll = -jnp.take_along_axis(logp, tgt[:, None], -1)[:, 0]
+        if mask is not None:
+            return jnp.sum(nll * mask) / jnp.maximum(mask.sum(), 1)
+        return nll.mean()
+    err = (out.astype(jnp.float32) - tgt) ** 2
+    if mask is not None:
+        return jnp.sum(err * mask[:, None]) / jnp.maximum(mask.sum() * err.shape[-1], 1)
+    return err.mean()

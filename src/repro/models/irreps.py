@@ -1,0 +1,130 @@
+"""E(3)-equivariant feature algebra up to l=2, in the Cartesian basis.
+
+NequIP composes features that transform as irreps of O(3).  Rather than a
+spherical-harmonic/Clebsch-Gordan machine, we carry the l<=2 content in
+Cartesian form (exactly equivalent for l<=2, and MXU-friendly):
+
+* l=0: scalars  (n, c)
+* l=1: vectors  (n, c, 3)
+* l=2: traceless symmetric matrices (n, c, 3, 3)  (5 dof embedded in 9)
+
+Tensor-product paths are the classical vector-algebra identities: dot,
+cross, symmetric-traceless outer product, matrix-vector action, Frobenius
+contraction.  Equivariance is exact in exact arithmetic and verified by
+rotation tests (tests/test_models.py::test_nequip_equivariance).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+EYE3 = jnp.eye(3)
+
+
+class Irreps(NamedTuple):
+    """A (scalars, vectors, tensors) feature triple; any member may be None."""
+
+    s: jax.Array | None  # (n, c0)
+    v: jax.Array | None  # (n, c1, 3)
+    t: jax.Array | None  # (n, c2, 3, 3)
+
+    def map(self, fn):
+        return Irreps(*(None if x is None else fn(x) for x in self))
+
+
+def sph_l1(rhat: jax.Array) -> jax.Array:
+    """(m, 3) unit displacement -> l=1 'spherical harmonic' (itself)."""
+    return rhat
+
+
+def sph_l2(rhat: jax.Array) -> jax.Array:
+    """(m, 3) -> (m, 3, 3) traceless symmetric outer product."""
+    outer = rhat[:, :, None] * rhat[:, None, :]
+    return outer - EYE3 / 3.0
+
+
+def traceless_sym(m: jax.Array) -> jax.Array:
+    """Project (..., 3, 3) onto its traceless symmetric part (l=2)."""
+    sym = 0.5 * (m + jnp.swapaxes(m, -1, -2))
+    tr = jnp.trace(sym, axis1=-2, axis2=-1)[..., None, None]
+    return sym - tr * EYE3 / 3.0
+
+
+# --- product paths (each output is an irrep of the stated l) ---------------
+
+
+def p_vv_s(a: jax.Array, b: jax.Array) -> jax.Array:
+    """1 (x) 1 -> 0 : dot product. (., c, 3) x (., c, 3) -> (., c)."""
+    return jnp.sum(a * b, axis=-1)
+
+
+def p_vv_v(a: jax.Array, b: jax.Array) -> jax.Array:
+    """1 (x) 1 -> 1 : cross product."""
+    return jnp.cross(a, b)
+
+
+def p_vv_t(a: jax.Array, b: jax.Array) -> jax.Array:
+    """1 (x) 1 -> 2 : symmetric traceless outer product."""
+    return traceless_sym(a[..., :, None] * b[..., None, :])
+
+
+def p_tv_v(t: jax.Array, v: jax.Array) -> jax.Array:
+    """2 (x) 1 -> 1 : matrix-vector action."""
+    return jnp.einsum("...ij,...j->...i", t, v)
+
+
+def p_tt_s(a: jax.Array, b: jax.Array) -> jax.Array:
+    """2 (x) 2 -> 0 : Frobenius contraction."""
+    return jnp.einsum("...ij,...ij->...", a, b)
+
+
+def p_tt_t(a: jax.Array, b: jax.Array) -> jax.Array:
+    """2 (x) 2 -> 2 : traceless symmetric part of the matrix product."""
+    return traceless_sym(jnp.einsum("...ik,...kj->...ij", a, b))
+
+
+# --- linear self-interactions (per-l channel mixing) ------------------------
+
+
+def linear(x: Irreps, w_s, w_v, w_t) -> Irreps:
+    """Channel-mixing linear map; acts per-l (equivariance-preserving)."""
+    return Irreps(
+        s=None if x.s is None else x.s @ w_s,
+        v=None if x.v is None else jnp.einsum("ncd,ce->ned", x.v, w_v),
+        t=None if x.t is None else jnp.einsum("ncij,ce->neij", x.t, w_t),
+    )
+
+
+def gate(x: Irreps, gates_v: jax.Array, gates_t: jax.Array) -> Irreps:
+    """Gated nonlinearity: silu on scalars; vectors/tensors scaled by a
+    sigmoid of dedicated scalar gates (Weiler-style, equivariant)."""
+    return Irreps(
+        s=None if x.s is None else jax.nn.silu(x.s),
+        v=None if x.v is None else x.v * jax.nn.sigmoid(gates_v)[..., None],
+        t=None if x.t is None else x.t * jax.nn.sigmoid(gates_t)[..., None, None],
+    )
+
+
+def rotate(x: Irreps, rot: jax.Array) -> Irreps:
+    """Apply a rotation matrix to every feature (for equivariance tests)."""
+    return Irreps(
+        s=x.s,
+        v=None if x.v is None else jnp.einsum("ij,ncj->nci", rot, x.v),
+        t=None
+        if x.t is None
+        else jnp.einsum("ik,nckl,jl->ncij", rot, x.t, rot),
+    )
+
+
+def bessel_rbf(r: jax.Array, n_rbf: int, cutoff: float) -> jax.Array:
+    """Sinc-like radial Bessel basis with smooth polynomial cutoff envelope
+    (NequIP eq. 6).  r: (m,) distances -> (m, n_rbf)."""
+    r = jnp.maximum(r, 1e-9)
+    n = jnp.arange(1, n_rbf + 1, dtype=jnp.float32)
+    basis = jnp.sqrt(2.0 / cutoff) * jnp.sin(n * jnp.pi * r[:, None] / cutoff) / r[:, None]
+    x = jnp.clip(r / cutoff, 0.0, 1.0)
+    envelope = 1.0 - 10.0 * x**3 + 15.0 * x**4 - 6.0 * x**5  # C2-smooth
+    return basis * envelope[:, None]

@@ -1,0 +1,248 @@
+"""AutoInt recommender (arXiv:1810.11921) with a hand-built EmbeddingBag.
+
+JAX has no ``nn.EmbeddingBag``: lookup is ``jnp.take`` on a fused table +
+``jax.ops.segment_sum``-style masked pooling over per-bag value slots —
+built here as a first-class substrate (kernel taxonomy §RecSys).  The
+embedding tables are the hot path: 39 sparse fields with multi-million-row
+tables (Criteo-like cardinalities), row-sharded across the whole mesh.
+
+Paths:
+* ``forward``          — CTR scoring: embeddings -> 3 self-attention
+                         interaction layers (2 heads, d=32) -> MLP -> logit.
+* ``retrieval_scores`` — one query against N candidate items: the user tower
+                         runs once; candidates scored by one (N, d) @ (d,)
+                         matvec (batched dot, not a loop).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Params = dict[str, Any]
+
+# Criteo-like table sizes cycled over the 39 sparse fields (public Criteo-1TB
+# cardinalities span 10..~200M; this mix keeps the fused table ~120M rows).
+_TABLE_SIZES = (
+    40_000_000, 10_000_000, 4_000_000, 2_000_000, 1_000_000, 500_000,
+    200_000, 100_000, 50_000, 10_000, 2_000, 500, 128,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class AutoIntConfig:
+    name: str = "autoint"
+    n_sparse: int = 39
+    embed_dim: int = 16
+    n_attn_layers: int = 3
+    n_heads: int = 2
+    d_attn: int = 32
+    mlp_dims: tuple[int, ...] = (256, 128)
+    table_sizes: tuple[int, ...] = ()
+    # int8 row-quantized embedding table (per-row scale) — the paper's
+    # compression insight applied to the lookup payload (§Perf): 4x less
+    # table memory AND 4x fewer gather bytes on the wire.
+    table_quant: bool = False
+
+    def resolved_tables(self) -> tuple[int, ...]:
+        if self.table_sizes:
+            sizes = list(self.table_sizes)
+        else:
+            sizes = [_TABLE_SIZES[i % len(_TABLE_SIZES)] for i in range(self.n_sparse)]
+        # pad the last table so the fused table row count shards evenly on
+        # any mesh up to 4096 chips (row-sharded lookup requires it)
+        total = sum(sizes)
+        sizes[-1] += -total % 4096
+        return tuple(sizes)
+
+    @property
+    def total_rows(self) -> int:
+        return sum(self.resolved_tables())
+
+    @property
+    def d_interact(self) -> int:
+        return self.n_heads * self.d_attn
+
+    def n_params(self) -> int:
+        d, da, h = self.embed_dim, self.d_attn, self.n_heads
+        n = self.total_rows * d
+        d_prev = d
+        for _ in range(self.n_attn_layers):
+            n += 3 * h * d_prev * da + d_prev * h * da
+            d_prev = h * da
+        dims = (self.n_sparse * d_prev,) + self.mlp_dims + (1,)
+        n += sum(a * b + b for a, b in zip(dims[:-1], dims[1:]))
+        n += d_prev * d  # retrieval projection
+        return n
+
+
+def field_offsets(cfg: AutoIntConfig) -> jnp.ndarray:
+    import numpy as np
+
+    sizes = np.asarray(cfg.resolved_tables(), np.int64)
+    offs = np.concatenate([[0], np.cumsum(sizes)[:-1]])
+    return jnp.asarray(offs, jnp.int32 if cfg.total_rows < 2**31 else jnp.int64)
+
+
+def init_params(cfg: AutoIntConfig, key, table_dtype=jnp.float32) -> Params:
+    ks = iter(jax.random.split(key, 8 + 4 * cfg.n_attn_layers))
+    d, da, h = cfg.embed_dim, cfg.d_attn, cfg.n_heads
+    layers = []
+    d_prev = d
+    for _ in range(cfg.n_attn_layers):
+        layers.append(
+            {
+                "wq": jax.random.normal(next(ks), (h, d_prev, da)) / d_prev**0.5,
+                "wk": jax.random.normal(next(ks), (h, d_prev, da)) / d_prev**0.5,
+                "wv": jax.random.normal(next(ks), (h, d_prev, da)) / d_prev**0.5,
+                "wres": jax.random.normal(next(ks), (d_prev, h * da)) / d_prev**0.5,
+            }
+        )
+        d_prev = h * da
+    dims = (cfg.n_sparse * d_prev,) + cfg.mlp_dims + (1,)
+    mlp = [
+        {
+            "w": jax.random.normal(next(ks), (a, b)) / a**0.5,
+            "b": jnp.zeros((b,)),
+        }
+        for a, b in zip(dims[:-1], dims[1:])
+    ]
+    if cfg.table_quant:
+        raw = jax.random.normal(next(ks), (cfg.total_rows, d)) * 0.01
+        scale = jnp.maximum(jnp.max(jnp.abs(raw), axis=1), 1e-8) / 127.0
+        table = jnp.clip(jnp.round(raw / scale[:, None]), -127, 127).astype(jnp.int8)
+        extra = {"table": table, "table_scale": scale.astype(jnp.float32)}
+    else:
+        extra = {
+            "table": (jax.random.normal(next(ks), (cfg.total_rows, d)) * 0.01).astype(
+                table_dtype
+            )
+        }
+    return {
+        **extra,
+        "attn": layers,
+        "mlp": mlp,
+        "w_user": jax.random.normal(next(ks), (d_prev, d)) / d_prev**0.5,
+    }
+
+
+def param_specs(cfg: AutoIntConfig, fsdp=("data",), tp: str = "model"):
+    """Embedding table row-sharded over *all* mesh axes (the DLRM layout);
+    the dense interaction/MLP params are tiny and replicated."""
+    all_axes = tuple(fsdp) + (tp,)
+    return {
+        "table": P(all_axes, None),
+        "attn": [
+            {"wq": P(None), "wk": P(None), "wv": P(None), "wres": P(None)}
+            for _ in range(cfg.n_attn_layers)
+        ],
+        "mlp": [{"w": P(None), "b": P(None)} for _ in range(len(cfg.mlp_dims) + 1)],
+        "w_user": P(None),
+    }
+
+
+# ---------------------------------------------------------------------------
+# EmbeddingBag: take + masked segment pooling
+# ---------------------------------------------------------------------------
+
+
+def embedding_bag(table, ids, offsets=None, mode: str = "sum"):
+    """torch.nn.EmbeddingBag equivalent on a fused table.
+
+    Args:
+      table: (rows, d).
+      ids: (B, F) single-valued, or (B, F, K) multi-valued with -1 padding.
+      offsets: optional (F,) per-field base offsets into the fused table.
+    Returns (B, F, d) pooled embeddings.
+    """
+    if offsets is not None:
+        off = offsets.reshape((1, -1) + (1,) * (ids.ndim - 2)).astype(ids.dtype)
+        ids = jnp.where(ids >= 0, ids + off, ids)
+    if ids.ndim == 2:
+        return jnp.take(table, jnp.maximum(ids, 0), axis=0)
+    b, f, k = ids.shape
+    valid = (ids >= 0)[..., None]
+    emb = jnp.take(table, jnp.maximum(ids, 0).reshape(-1), axis=0).reshape(b, f, k, -1)
+    pooled = (emb * valid).sum(axis=2)
+    if mode == "mean":
+        pooled = pooled / jnp.maximum(valid.sum(axis=2), 1)
+    return pooled
+
+
+# ---------------------------------------------------------------------------
+# AutoInt forward paths
+# ---------------------------------------------------------------------------
+
+
+def _interact(cfg: AutoIntConfig, params: Params, emb):
+    """emb (B, F, d) -> (B, F, h*da) via stacked self-attention layers."""
+    x = emb
+    for lyr in params["attn"]:
+        q = jnp.einsum("bfd,hde->bhfe", x, lyr["wq"])
+        k = jnp.einsum("bfd,hde->bhfe", x, lyr["wk"])
+        v = jnp.einsum("bfd,hde->bhfe", x, lyr["wv"])
+        scores = jnp.einsum("bhfe,bhge->bhfg", q, k) / cfg.d_attn**0.5
+        w = jax.nn.softmax(scores, axis=-1)
+        o = jnp.einsum("bhfg,bhge->bhfe", w, v)
+        o = o.transpose(0, 2, 1, 3).reshape(x.shape[0], x.shape[1], -1)
+        x = jax.nn.relu(o + x @ lyr["wres"])
+    return x
+
+
+def _lookup(cfg: AutoIntConfig, params: Params, ids):
+    """Embedding lookup; dequantizes after the (int8) gather when quantized."""
+    emb = embedding_bag(params["table"], ids, offsets=field_offsets(cfg))
+    if cfg.table_quant:
+        offs = field_offsets(cfg)
+        flat = jnp.where(ids >= 0, ids + offs[None, :].astype(ids.dtype), 0)
+        scale = jnp.take(params["table_scale"], flat, axis=0)  # (B, F)
+        emb = emb.astype(jnp.float32) * scale[..., None]
+    return emb
+
+
+def forward(cfg: AutoIntConfig, params: Params, ids) -> jax.Array:
+    """ids (B, F) int per-field local indices -> CTR logits (B,)."""
+    emb = _lookup(cfg, params, ids)
+    x = _interact(cfg, params, emb)
+    flat = x.reshape(x.shape[0], -1)
+    for i, lyr in enumerate(params["mlp"]):
+        flat = flat @ lyr["w"] + lyr["b"]
+        if i < len(params["mlp"]) - 1:
+            flat = jax.nn.relu(flat)
+    return flat[:, 0]
+
+
+def loss_fn(cfg: AutoIntConfig, params: Params, batch) -> jax.Array:
+    """Binary cross-entropy on click labels (numerically stable form)."""
+    logits = forward(cfg, params, batch["ids"])
+    y = batch["labels"].astype(jnp.float32)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+
+
+def user_vector(cfg: AutoIntConfig, params: Params, ids) -> jax.Array:
+    """(B, F) query features -> (B, embed_dim) user vectors (two-tower head)."""
+    emb = _lookup(cfg, params, ids)
+    x = _interact(cfg, params, emb)  # (B, F, d_interact)
+    return x.mean(axis=1) @ params["w_user"]  # (B, embed_dim)
+
+
+def retrieval_scores(cfg: AutoIntConfig, params: Params, ids, cand_ids) -> jax.Array:
+    """Score one query (1, F) against N candidates of the last sparse field.
+
+    The user tower runs once; candidate scoring is a single (N, d) @ (d,)
+    matvec against the candidate field's embedding rows."""
+    uv = user_vector(cfg, params, ids)[0]  # (d,)
+    last_off = field_offsets(cfg)[-1]
+    rows = cand_ids + last_off.astype(cand_ids.dtype)
+    item_emb = jnp.take(params["table"], rows, axis=0)
+    if cfg.table_quant:
+        item_emb = item_emb.astype(jnp.float32) * jnp.take(
+            params["table_scale"], rows, axis=0
+        )[:, None]
+    return item_emb @ uv

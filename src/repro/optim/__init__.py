@@ -1,0 +1,8 @@
+"""Optimizers + distributed-optimization tricks.
+
+* :mod:`repro.optim.adamw` — AdamW with the MiniCPM WSD
+  (warmup-stable-decay) schedule.
+* :mod:`repro.optim.grad_compress` — int8 error-feedback gradient
+  compression for the data-parallel all-reduce (beyond-paper application of
+  the paper's communication-compression insight).
+"""

@@ -1,0 +1,87 @@
+"""AdamW + WSD (warmup-stable-decay) schedule, pure-pytree implementation.
+
+WSD (MiniCPM, arXiv:2404.06395): linear warmup -> long constant plateau ->
+short (10%) sharp decay.  The constant plateau is what makes mid-run
+checkpoint branching cheap — relevant to the elastic-restart story in
+train/checkpoint.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    # WSD schedule
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    decay_frac: float = 0.1  # last 10% of steps decay
+    min_lr_frac: float = 0.1
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def wsd_schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Warmup-Stable-Decay learning-rate multiplier (MiniCPM §4)."""
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    decay_start = cfg.total_steps * (1.0 - cfg.decay_frac)
+    decay_t = (step - decay_start) / jnp.maximum(cfg.total_steps - decay_start, 1)
+    decay = 1.0 - (1.0 - cfg.min_lr_frac) * jnp.clip(decay_t, 0.0, 1.0)
+    mult = jnp.where(step < cfg.warmup_steps, warm, 1.0)
+    return cfg.lr * jnp.where(step > decay_start, decay, mult)
+
+
+def init(params: Any) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return OptState(step=jnp.zeros((), jnp.int32), m=zeros, v=jax.tree.map(jnp.copy, zeros))
+
+
+def global_norm(grads: Any) -> jax.Array:
+    leaves = jax.tree.leaves(grads)
+    return jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in leaves))
+
+
+def apply(
+    cfg: AdamWConfig, params: Any, grads: Any, state: OptState
+) -> tuple[Any, OptState]:
+    """One AdamW step with global-norm clipping and the WSD schedule."""
+    step = state.step + 1
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gn, 1e-9))
+    lr = wsd_schedule(cfg, step)
+    bc1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m_new = cfg.b1 * m + (1 - cfg.b1) * g
+        v_new = cfg.b2 * v + (1 - cfg.b2) * g * g
+        update = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + cfg.eps)
+        p_new = p.astype(jnp.float32) - lr * (update + cfg.weight_decay * p.astype(jnp.float32))
+        return p_new.astype(p.dtype), m_new, v_new
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, OptState(step=step, m=new_m, v=new_v)

@@ -1,0 +1,89 @@
+"""Int8 error-feedback gradient compression for data-parallel sync.
+
+Beyond-paper: the paper compresses the *frontier* exchanged by BFS; the
+same network-bound-collective insight applied to training is gradient
+compression on the DP all-reduce.  Scheme (Karimireddy-style EF-SGD):
+
+    e_t       <- residual carried from last step
+    c_t       =  Q(g_t + e_t)            (int8 block quant, 128-value scales)
+    e_{t+1}   =  (g_t + e_t) - deQ(c_t)  (local, exact)
+    g_sync    =  allreduce(c_t) / world  (int8 payloads on the wire)
+
+Error feedback makes the *accumulated* quantization error bounded, so SGD /
+Adam converge at the uncompressed rate (up to constants).  Tested on a
+quadratic in tests/test_optim.py.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.compression import collectives as cc
+from repro.kernels.quant import ref as quant
+
+
+class EFState(NamedTuple):
+    residual: Any  # same pytree as grads, fp32
+
+
+def init(grads_shape: Any) -> EFState:
+    return EFState(
+        residual=jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_shape)
+    )
+
+
+def _pad_to(x: jax.Array, multiple: int) -> tuple[jax.Array, int]:
+    n = x.size
+    n_pad = -(-n // multiple) * multiple
+    return jnp.pad(x.reshape(-1), (0, n_pad - n)), n
+
+
+def compress_decompress(g: jax.Array) -> jax.Array:
+    """Local quantize->dequantize round trip (what the wire sees)."""
+    flat, n = _pad_to(g.astype(jnp.float32), quant.GROUP)
+    q, s = quant.quantize(flat)
+    return quant.dequantize(q, s)[:n].reshape(g.shape)
+
+
+def ef_step(grads: Any, state: EFState) -> tuple[Any, EFState]:
+    """Error-feedback compression (single-host form: the collective itself
+    is applied by the caller via cc.allreduce_int8 inside shard_map)."""
+
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        sent = compress_decompress(corrected)
+        return sent.astype(g.dtype), corrected - sent
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(state.residual)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (
+        treedef.unflatten([o[0] for o in out]),
+        EFState(residual=treedef.unflatten([o[1] for o in out])),
+    )
+
+
+def dp_allreduce_int8(grads: Any, state: EFState, axis, group_size: int):
+    """Full distributed EF int8 gradient mean over a mesh axis.
+
+    For use inside shard_map over the DP axis: quantize (g + e), reduce via
+    int8 all-to-all + all-gather, keep the residual locally.
+    """
+
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        flat, n = _pad_to(corrected, group_size * quant.GROUP)
+        reduced = cc.allreduce_int8(flat, axis, group_size) / group_size
+        sent = compress_decompress(corrected)
+        return reduced[:n].reshape(g.shape).astype(g.dtype), corrected - sent
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(state.residual)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (
+        treedef.unflatten([o[0] for o in out]),
+        EFState(residual=treedef.unflatten([o[1] for o in out])),
+    )

@@ -1,0 +1,1 @@
+"""Batched serving runtime for the LM archs (slot-based continuous batching)."""

@@ -1,0 +1,106 @@
+"""Slot-based batched decode engine (continuous batching, greedy/temperature).
+
+A fixed pool of B slots shares one (L, B, S, w) KV cache.  Requests are
+assigned to free slots; every engine tick runs ONE jitted decode step for
+the whole pool (active slots masked), so throughput is batch-limited, not
+request-limited — the standard TPU serving shape (decode_32k cell lowers
+exactly this step).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as tfm
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (p,) int32
+    max_new: int
+    out: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    def __init__(
+        self,
+        cfg: tfm.TransformerConfig,
+        params: Any,
+        batch_slots: int = 8,
+        max_seq: int = 512,
+        temperature: float = 0.0,
+        seed: int = 0,
+    ):
+        self.cfg = cfg
+        self.params = params
+        self.b = batch_slots
+        self.max_seq = max_seq
+        self.temperature = temperature
+        self.cache = tfm.init_cache(cfg, batch_slots, max_seq)
+        self.pos = np.zeros(batch_slots, np.int32)
+        self.slot_req: list[Request | None] = [None] * batch_slots
+        self.pending: list[Request] = []
+        self.key = jax.random.PRNGKey(seed)
+        self._step = jax.jit(
+            lambda p, c, t, pos: tfm.decode_step(cfg, p, c, t, pos)
+        )
+        self._next_tok = np.zeros(batch_slots, np.int32)
+
+    def submit(self, req: Request) -> None:
+        self.pending.append(req)
+
+    def _assign(self) -> None:
+        for i in range(self.b):
+            if self.slot_req[i] is None and self.pending:
+                req = self.pending.pop(0)
+                self.slot_req[i] = req
+                # prefill by stepping through the prompt tokens (cache fill)
+                self.pos[i] = 0
+                self._next_tok[i] = req.prompt[0]
+                req._prompt_cursor = 0  # type: ignore[attr-defined]
+
+    def tick(self) -> int:
+        """One engine iteration; returns number of active slots."""
+        self._assign()
+        active = [i for i in range(self.b) if self.slot_req[i] is not None]
+        if not active:
+            return 0
+        toks = jnp.asarray(self._next_tok)
+        pos = jnp.asarray(self.pos)
+        logits, self.cache = self._step(self.params, self.cache, toks, pos)
+        if self.temperature > 0:
+            self.key, k = jax.random.split(self.key)
+            sampled = jax.random.categorical(k, logits / self.temperature, axis=-1)
+        else:
+            sampled = jnp.argmax(logits, axis=-1)
+        sampled = np.asarray(sampled, np.int32)
+
+        for i in active:
+            req = self.slot_req[i]
+            cur = req._prompt_cursor  # type: ignore[attr-defined]
+            self.pos[i] += 1
+            if cur + 1 < len(req.prompt):  # still consuming the prompt
+                req._prompt_cursor = cur + 1  # type: ignore[attr-defined]
+                self._next_tok[i] = req.prompt[cur + 1]
+                continue
+            tok = int(sampled[i])
+            req.out.append(tok)
+            self._next_tok[i] = tok
+            if len(req.out) >= req.max_new or self.pos[i] >= self.max_seq - 1:
+                req.done = True
+                self.slot_req[i] = None
+                self.pos[i] = 0
+        return len(active)
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> None:
+        for _ in range(max_ticks):
+            if self.tick() == 0 and not self.pending:
+                return
+        raise RuntimeError("engine did not drain")

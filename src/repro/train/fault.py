@@ -1,0 +1,79 @@
+"""Fault tolerance: step watchdog, straggler detection, restart policy.
+
+At thousands of nodes, *something* is always failing.  The runtime pieces:
+
+* deterministic data (data/*: batch = f(config, step)) + atomic checkpoints
+  (train/checkpoint.py) give **restart-exact** recovery;
+* :class:`StepWatchdog` flags hung steps and straggler steps (> k x rolling
+  median) — the trigger for preemptive checkpoint + reschedule;
+* :func:`resume_or_init` is the single entry point the launcher uses: it
+  either restores the newest complete checkpoint or initializes fresh.
+
+Straggler *mitigation* on the collective path is structural: the bucketed
+compressed exchanges (compression/collectives.py) shrink the operand of the
+slowest link, which is where tail latency lives (EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+from repro.train import checkpoint
+
+
+@dataclasses.dataclass
+class StepWatchdog:
+    """Rolling-median step timer with straggler / hang classification."""
+
+    straggler_factor: float = 3.0
+    hang_timeout_s: float = 300.0
+    window: int = 32
+
+    def __post_init__(self):
+        self._times: list[float] = []
+        self._t0: float | None = None
+        self.stragglers: list[int] = []
+        self.step_idx = 0
+
+    def start(self) -> None:
+        self._t0 = time.monotonic()
+
+    def stop(self) -> str:
+        """Record one step; returns 'ok' | 'straggler'."""
+        assert self._t0 is not None, "start() not called"
+        dt = time.monotonic() - self._t0
+        self._t0 = None
+        verdict = "ok"
+        if len(self._times) >= 5:
+            med = sorted(self._times)[len(self._times) // 2]
+            if dt > self.straggler_factor * med:
+                verdict = "straggler"
+                self.stragglers.append(self.step_idx)
+        self._times.append(dt)
+        if len(self._times) > self.window:
+            self._times.pop(0)
+        self.step_idx += 1
+        return verdict
+
+    def is_hung(self) -> bool:
+        return self._t0 is not None and (time.monotonic() - self._t0) > self.hang_timeout_s
+
+
+def resume_or_init(
+    init_fn: Callable[[], Any], ckpt_dir: str, shardings: Any | None = None
+) -> tuple[Any, int]:
+    """Restore the newest complete checkpoint, or initialize fresh.
+
+    Returns (state, start_step).  With ``shardings`` given, restore is
+    elastic (arrays placed on the current mesh regardless of the saver's)."""
+    step = checkpoint.latest_step(ckpt_dir)
+    if step is None:
+        return init_fn(), 0
+    like = init_fn()  # structure donor (shapes/dtypes/tree)
+    if shardings is not None:
+        state = checkpoint.restore_sharded(like, step, ckpt_dir, shardings)
+    else:
+        state = checkpoint.restore(like, step, ckpt_dir)
+    return state, step + 1
