@@ -1,8 +1,10 @@
 """Paper Tables 7.4/7.5: per-zone communication volume before/after
 compression, and modeled communication-time reduction.
 
-Replays a real multi-rank BFS level by level on the host (numpy), computing
-the exact bytes each zone would move under each wire format:
+Replays a real multi-rank BFS level by level on the host (numpy),
+accumulating the exact bytes each zone would move under each wire format
+through :class:`repro.comm.CommStats` — the byte arithmetic lives in the
+wire formats (:mod:`repro.comm.formats`), not in this benchmark:
 
   zones: vertexBroadcast / columnCommunication / rowCommunication /
          predecessorReduction  (the paper's instrumented regions, §4.2.1)
@@ -19,32 +21,52 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.compression import codecs, collectives as cc, threshold
+from repro.comm import BitmapFormat, CommStats, DenseFormat, RawIdFormat
+from repro.comm.ladder import BucketLadder
+from repro.compression import codecs, threshold
 from repro.core import csr as csrmod
 from repro.core import validate
 from repro.graphgen import builder, kronecker
 
+ZONES = (
+    "vertexBroadcast",
+    "columnCommunication",
+    "rowCommunication",
+    "predecessorReduction",
+)
+FORMATS = ("raw", "bitmap", "packed", "bp128d")
+
+
+def _packed_wire_bytes(ladder: BucketLadder, ids: np.ndarray) -> int:
+    """Wire bytes of one packed stream under the ladder's bucket choice."""
+    count = ids.size
+    exc = int((codecs.delta_encode(ids.astype(np.uint32)) >> 16 > 0).sum()) if count else 0
+    b = int(ladder.bucket_for(np.int32(count), np.int32(exc)))
+    if b < len(ladder.specs):
+        return ladder.formats()[b].wire_bytes
+    return 4 * ladder.floor_words
+
 
 def simulate_zones(scale: int = 17, rows: int = 4, cols: int = 4, seed: int = 1):
-    """Host replay of the 2D BFS communication; returns per-zone byte counts."""
+    """Host replay of the 2D BFS communication; returns a filled CommStats
+    whose phases are the paper's zones and fmts the four wire formats."""
     g = builder.build_csr(kronecker.kronecker_edges(scale, seed=seed), n=1 << scale)
     bg = csrmod.partition_2d(g, rows=rows, cols=cols)
     part = bg.part
     s = part.chunk
     wp = 16 if part.n_c <= (1 << 16) else 32
-    ladder = cc.BucketLadder.default(s)  # column (membership)
-    row_ladder = cc.BucketLadder.default(s, floor_words=s, payload_width=wp)
+    ladder = BucketLadder.default(s)  # column (membership vs 1-bit floor)
+    row_ladder = BucketLadder.default(s, floor_words=s, payload_width=wp)
     root = int(np.argmax(g.degrees()))
     level = validate.reference_bfs(g, root)
 
-    zones = {
-        "vertexBroadcast": {"raw": 8 * rows * cols, "bitmap": 8 * rows * cols,
-                            "packed": 8 * rows * cols, "bp128d": 8 * rows * cols},
-        "columnCommunication": {"raw": 0, "bitmap": 0, "packed": 0, "bp128d": 0},
-        "rowCommunication": {"raw": 0, "bitmap": 0, "packed": 0, "bp128d": 0},
-        "predecessorReduction": {},
-    }
+    stats = CommStats()
+    raw_col = RawIdFormat(s)
+    bitmap = BitmapFormat(s)
+    dense = DenseFormat(s)
     bp = codecs.BP128(delta=True)
+    for fmt in FORMATS:  # root broadcast: 8 bytes to every rank, any format
+        stats.add("vertexBroadcast", fmt, "all-gather", 8 * rows * cols)
     max_level = int(level.max())
     owner = np.minimum(np.arange(part.n) // s, rows * cols - 1)
 
@@ -55,43 +77,47 @@ def simulate_zones(scale: int = 17, rows: int = 4, cols: int = 4, seed: int = 1)
         for q in range(rows * cols):
             ids = frontier[owner[frontier] == q] - q * s
             n_recv = rows - 1
-            zones["columnCommunication"]["raw"] += 4 * s * n_recv  # static cap
-            zones["columnCommunication"]["bitmap"] += (s // 8) * n_recv
-            counts = ids.size
-            exc = int((codecs.delta_encode(ids.astype(np.uint32)) >> 16 > 0).sum()) if counts else 0
-            b = int(ladder.bucket_for(np.int32(counts), np.int32(exc)))
-            zones["columnCommunication"]["packed"] += 4 * ladder.words_for_branch(b) * n_recv
-            blob = bp.encode(ids.astype(np.uint32)) if counts else b""
-            zones["columnCommunication"]["bp128d"] += len(blob) * n_recv
+            stats.add("columnCommunication", "raw", "all-gather",
+                      raw_col.wire_bytes * n_recv)
+            stats.add("columnCommunication", "bitmap", "all-gather",
+                      bitmap.wire_bytes * n_recv)
+            stats.add("columnCommunication", "packed", "all-gather",
+                      _packed_wire_bytes(ladder, ids) * n_recv)
+            blob = bp.encode(ids.astype(np.uint32)) if ids.size else b""
+            stats.add("columnCommunication", "bp128d", "all-gather",
+                      len(blob) * n_recv)
         # --- row phase: candidate (id, parent) subchunks to owners
         nxt = np.nonzero(level == lv + 1)[0]
         for q in range(rows * cols):
             ids = nxt[owner[nxt] == q] - q * s
             n_senders = cols - 1
-            zones["rowCommunication"]["raw"] += 4 * s * n_senders  # dense int32 cand
-            zones["rowCommunication"]["bitmap"] += 4 * s * n_senders  # parents dense
-            counts = ids.size
-            exc = int((codecs.delta_encode(ids.astype(np.uint32)) >> 16 > 0).sum()) if counts else 0
-            b = int(row_ladder.bucket_for(np.int32(counts), np.int32(exc)))
-            words = row_ladder.words_for_branch(b, payload_width=wp)
-            zones["rowCommunication"]["packed"] += 4 * words * n_senders
-            blob = bp.encode(ids.astype(np.uint32)) if counts else b""
-            zones["rowCommunication"]["bp128d"] += (len(blob) + 2 * counts) * n_senders
+            stats.add("rowCommunication", "raw", "all-to-all",
+                      dense.wire_bytes * n_senders)  # dense int32 candidates
+            stats.add("rowCommunication", "bitmap", "all-to-all",
+                      dense.wire_bytes * n_senders)  # parents stay dense
+            stats.add("rowCommunication", "packed", "all-to-all",
+                      _packed_wire_bytes(row_ladder, ids) * n_senders)
+            blob = bp.encode(ids.astype(np.uint32)) if ids.size else b""
+            stats.add("rowCommunication", "bp128d", "all-to-all",
+                      (len(blob) + 2 * ids.size) * n_senders)
 
     # predecessor reduction: one dense pass at the end (uncompressed in the
     # paper too — its Table 7.4 shows 0% there)
-    pred_bytes = 4 * part.n
-    zones["predecessorReduction"] = {k: pred_bytes for k in ("raw", "bitmap", "packed", "bp128d")}
-    return zones, g, part
+    for fmt in FORMATS:
+        stats.add("predecessorReduction", fmt, "all-gather", 4 * part.n)
+    return stats, g, part
 
 
 def run(scale: int = 17, rows: int = 4, cols: int = 4):
-    zones, g, part = simulate_zones(scale, rows, cols)
+    stats, g, part = simulate_zones(scale, rows, cols)
+    zones = stats.per_phase_fmt()
     pol = threshold.ThresholdPolicy()
     table = []
-    for zone, fmts in zones.items():
+    for zone in ZONES:
+        fmts = zones[zone]
         raw = fmts["raw"]
-        for fmt, b in fmts.items():
+        for fmt in FORMATS:
+            b = fmts[fmt]
             red = 100.0 * (1 - b / raw) if raw else 0.0
             speedup = pol.modeled_speedup(max(raw / 4, 1), ratio=max(raw / max(b, 1), 1.0))
             table.append(
@@ -108,11 +134,15 @@ def run(scale: int = 17, rows: int = 4, cols: int = 4):
     return table
 
 
-def main() -> None:
+def print_table(table: list[dict]) -> None:
     print("zone,format,bytes,data_reduction_pct,modeled_time_reduction_pct")
-    for r in run():
+    for r in table:
         print(f"{r['zone']},{r['format']},{r['bytes']},{r['reduction_pct']:.2f},"
               f"{r['modeled_time_reduction_pct']:.2f}")
+
+
+def main() -> None:
+    print_table(run())
 
 
 if __name__ == "__main__":

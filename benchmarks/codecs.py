@@ -13,7 +13,8 @@ import time
 
 import numpy as np
 
-from repro.compression import codecs, registry
+from repro.comm import registry
+from repro.compression import codecs
 from repro.core import bfs as bfsmod
 from repro.graphgen import builder, kronecker, zipf
 
@@ -55,7 +56,7 @@ def run(scale: int = 14, n_zipf: int = 200_000) -> list[dict]:
     gaps = codecs.delta_encode(frontier)
     h = zipf.empirical_entropy_bits(gaps)
     rows.append({"codec": f"H(x)_gaps={h:.2f}bit", "dataset": "frontier"})
-    for name in registry.available():
+    for name in registry.available_codecs():
         c = registry.make_codec(name)
         if name == "bitmap" and frontier.size == 0:
             continue
@@ -63,7 +64,7 @@ def run(scale: int = 14, n_zipf: int = 200_000) -> list[dict]:
         r["dataset"] = "frontier"
         rows.append(r)
     stream = np.sort(np.unique(zipf.zipf_stream(n_zipf, alpha=1.2, seed=0)))
-    for name in registry.available():
+    for name in registry.available_codecs():
         c = registry.make_codec(name)
         r = bench_codec(c, stream.astype(np.uint32))
         r["dataset"] = "zipf-index"

@@ -1,27 +1,69 @@
 """Run every benchmark at reduced size; one CSV block per paper table.
 
     PYTHONPATH=src python -m benchmarks.run [--full] [--skip scaling]
+
+Also writes ``BENCH_comm.json`` (per-zone / per-format communication bytes
+from the CommStats host replay) so successive PRs have a machine-readable
+perf trajectory to compare against.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import time
 import traceback
+
+
+def write_bench_comm(path: str, full: bool, table: list[dict] | None = None) -> None:
+    from benchmarks import bfs_comm
+
+    scale, rows, cols = _bench_comm_size(full)
+    if table is None:
+        table = bfs_comm.run(scale=scale, rows=rows, cols=cols)
+    doc = {
+        "benchmark": "bfs_comm",
+        "scale": scale,
+        "rows": rows,
+        "cols": cols,
+        "table": table,
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+    print(f"# wrote {path} ({len(table)} rows)")
+
+
+def _bench_comm_size(full: bool) -> tuple[int, int, int]:
+    return (17, 4, 4) if full else (15, 2, 2)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-closer sizes (slow)")
     ap.add_argument("--skip", nargs="*", default=[])
+    ap.add_argument(
+        "--bench-json",
+        default=os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                             "BENCH_comm.json"),
+        help="where to write the BENCH_comm.json trajectory artifact",
+    )
     args = ap.parse_args()
 
     from benchmarks import bfs_comm, breakdown, codecs, frontier_stats, teps
 
+    bench_table: list[list[dict]] = []  # shared with write_bench_comm below
+
+    def bfs_comm_suite() -> None:
+        scale, rows, cols = _bench_comm_size(args.full)
+        table = bfs_comm.run(scale=scale, rows=rows, cols=cols)
+        bfs_comm.print_table(table)
+        bench_table.append(table)
+
     suites = [
         ("codecs (Tables 5.4/5.5)", codecs.main),
         ("frontier_stats (Fig 5.2 / Table 5.3)", frontier_stats.main),
-        ("bfs_comm (Tables 7.4/7.5)", bfs_comm.main),
+        ("bfs_comm (Tables 7.4/7.5)", bfs_comm_suite),
         ("breakdown (Fig 7.3)", breakdown.main),
         ("teps (§2.6.3)", teps.main),
     ]
@@ -42,6 +84,14 @@ def main() -> None:
             print(f"# done in {time.time() - t0:.1f}s")
         except Exception:  # noqa: BLE001
             failures.append(name)
+            traceback.print_exc()
+    # the artifact reuses the suite's table; a skipped or failed bfs_comm
+    # must not be silently re-run here
+    if "bench-json" not in args.skip and bench_table:
+        try:
+            write_bench_comm(args.bench_json, args.full, table=bench_table[0])
+        except Exception:  # noqa: BLE001
+            failures.append("bench-json")
             traceback.print_exc()
     if failures:
         raise SystemExit(f"benchmark failures: {failures}")

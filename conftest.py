@@ -1,0 +1,14 @@
+"""Repo-wide pytest setup.
+
+Property tests use Hypothesis when it is installed.  On air-gapped images
+where it is not, fall back to the tiny deterministic shim in
+``tests/_shims/hypothesis`` (same decorator API, seeded random sampling)
+so the suite still collects and the properties still get exercised.
+"""
+
+import importlib.util
+import os
+import sys
+
+if importlib.util.find_spec("hypothesis") is None:
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "tests", "_shims"))

@@ -1,0 +1,50 @@
+"""The communication plane: one adaptive wire-format engine behind every
+collective.
+
+The paper's core contribution is choosing the cheapest wire representation
+per exchange (compressed id stream vs dense bitmap, gated by a modeled
+threshold).  This subsystem owns that choice end to end:
+
+* :mod:`repro.comm.formats`  — the WireFormat geometry + pack/unpack
+  (bitmap, PFOR16 id stream, raw ids, dense, int8-quantized).
+* :mod:`repro.comm.ladder`   — bucket ladders pruned by word count AND the
+  ThresholdPolicy break-even (paper §5.4.3).
+* :mod:`repro.comm.engine`   — AdaptiveExchange: pmax group consensus +
+  lax.switch dispatch + byte-accounted collective primitives.
+* :mod:`repro.comm.stats`    — CommStats, the per-phase byte ledger whose
+  entries correspond 1:1 with the collective ops in lowered HLO.
+* :mod:`repro.comm.registry` — the unified wire-plan + host-codec factory
+  (absorbs the old compression registry).
+* :mod:`repro.comm.collectives` — the three collective paths (BFS column,
+  BFS row, int8 gradient all-reduce) rebuilt on the engine.
+
+Layering: core/distributed_bfs -> comm -> kernels (bitpack/quant).
+``repro.compression`` keeps the host-side variable-length codecs and the
+threshold model; its old ``collectives``/``registry`` modules re-export
+from here for compatibility.
+"""
+
+from repro.comm.engine import AdaptiveExchange  # noqa: F401
+from repro.comm.formats import (  # noqa: F401
+    INF,
+    BitmapFormat,
+    DenseFormat,
+    IdStreamFormat,
+    IdStreamSpec,
+    Int8Format,
+    RawIdFormat,
+    WireFormat,
+    pack_bitmap,
+    pack_id_stream,
+    unpack_bitmap,
+    unpack_id_stream,
+)
+from repro.comm.ladder import BucketLadder, stream_stats  # noqa: F401
+from repro.comm.stats import CommStats, ExchangeRecord  # noqa: F401
+from repro.comm.collectives import (  # noqa: F401
+    allgather_membership,
+    allreduce_int8,
+    alltoall_min_candidates,
+)
+from repro.comm import registry  # noqa: F401
+from repro.compression.threshold import ThresholdPolicy  # noqa: F401

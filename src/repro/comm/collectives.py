@@ -1,0 +1,224 @@
+"""The adaptive collectives, rebuilt on the AdaptiveExchange engine.
+
+Paper Alg. 4 on the accelerator: the column phase (ALLGATHERV + compress)
+and the row phase (ALLTOALLV + compress) both dispatch through
+:class:`repro.comm.engine.AdaptiveExchange`; the representation on the
+wire is one of the :mod:`repro.comm.formats` chosen per communicator group
+by the bucket ladder.  The int8 gradient all-reduce (beyond-paper) is the
+degenerate single-format case of the same engine.
+
+Every collective reports its bytes through :class:`repro.comm.stats.CommStats`.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm.engine import AdaptiveExchange
+from repro.comm.formats import (
+    INF,
+    BitmapFormat,
+    DenseFormat,
+    IdStreamFormat,
+    Int8Format,
+    RawIdFormat,
+)
+from repro.comm.ladder import BucketLadder, stream_stats
+from repro.comm.stats import CommStats
+from repro.kernels.bitpack import ops as bp
+from repro.kernels.bitpack import ref as bpref
+from repro.kernels.quant import ref as quant
+
+
+def _scatter_membership(u_ids: jax.Array, s: int, group_size: int) -> jax.Array:
+    """(group, cap) gathered ids -> (group*s,) membership vector."""
+    offs = (jnp.arange(group_size, dtype=jnp.int32) * s)[:, None]
+    flat = jnp.where(u_ids < s, u_ids + offs, group_size * s).reshape(-1)
+    out = jnp.zeros((group_size * s + 1,), bool).at[flat].set(True)
+    return out[: group_size * s]
+
+
+# ---------------------------------------------------------------------------
+# column phase: membership all-gather
+# ---------------------------------------------------------------------------
+
+
+def gather_bitmap(ex: AdaptiveExchange, bits: jax.Array) -> jax.Array:
+    """Dense width-1 bitmap all-gather of an (s,) membership vector."""
+    fmt = BitmapFormat(bits.shape[0])
+    return fmt.unpack(ex.all_gather(fmt.pack(bits), fmt=fmt.name))
+
+
+def gather_raw_ids(ex: AdaptiveExchange, bits: jax.Array) -> jax.Array:
+    """Uncompressed 32-bit id-list all-gather (the paper's Baseline)."""
+    s = bits.shape[0]
+    fmt = RawIdFormat(s)
+    ids, meta = fmt.pack(bits)
+    g_ids = ex.all_gather(ids, fmt=fmt.name).reshape(ex.group_size, s)
+    g_meta = ex.all_gather(meta, fmt=fmt.name, part="meta").reshape(ex.group_size, 1)
+    u_ids, _ = jax.vmap(lambda i, m: fmt.unpack(i, m, fill=s))(g_ids, g_meta)
+    return _scatter_membership(u_ids, s, ex.group_size)
+
+
+def allgather_membership(
+    bits: jax.Array,
+    axis,
+    ladder: BucketLadder,
+    group_size: int,
+    *,
+    stats: CommStats | None = None,
+    phase: str = "bfs/column",
+):
+    """Adaptive all-gather of a membership vector (paper's column phase).
+
+    Every rank contributes an ``(s,)`` bool vector; returns the
+    ``(group_size * s,)`` concatenation.  The transported representation is
+    chosen per communicator group via the engine's consensus dispatch.
+    """
+    s = ladder.s
+    ex = AdaptiveExchange(phase, axis, group_size, ladder, stats)
+    if not ladder.specs:  # degenerate ladder: dense bitmap only
+        return ex.dispatch(None, [lambda _: gather_bitmap(ex, bits)])
+    ids, count, exc_count = stream_stats(bits, s)
+
+    def sparse_branch(fmt: IdStreamFormat):
+        def run(_):
+            words, meta = fmt.pack(ids, count)
+            g_words = ex.all_gather(words, fmt=fmt.name).reshape(
+                group_size, fmt.data_words
+            )
+            g_meta = ex.all_gather(meta, fmt=fmt.name, part="meta").reshape(
+                group_size, 2
+            )
+            u_ids, _, _ = jax.vmap(lambda w, m: fmt.unpack(w, m, fill=s))(
+                g_words, g_meta
+            )
+            return _scatter_membership(u_ids, s, group_size)
+
+        return run
+
+    branches = [sparse_branch(f) for f in ladder.formats()] + [
+        lambda _: gather_bitmap(ex, bits)
+    ]
+    return ex.dispatch(ladder.bucket_for(count, exc_count), branches)
+
+
+# ---------------------------------------------------------------------------
+# row phase: candidate all-to-all + min-reduce
+# ---------------------------------------------------------------------------
+
+
+def alltoall_dense_min(ex: AdaptiveExchange, prop: jax.Array) -> jax.Array:
+    """Dense int32 all-to-all + min (raw/bitmap row phase and the fallback)."""
+    c, s = prop.shape
+    fmt = DenseFormat(s)
+    recv = ex.all_to_all(prop, fmt=fmt.name).reshape(c, s)
+    return jnp.min(recv, axis=0)
+
+
+def alltoall_min_candidates(
+    prop: jax.Array,
+    axis,
+    ladder: BucketLadder,
+    group_size: int,
+    *,
+    stats: CommStats | None = None,
+    phase: str = "bfs/row",
+):
+    """Adaptive all-to-all + min-reduce of candidate parents (row phase).
+
+    ``prop``: (group_size, s) int32 — proposal subchunk per destination rank
+    (INF = no candidate).  Returns (s,) int32 min over all senders of the
+    subchunk addressed to this rank.  Ids are delta+patched-packed; parent
+    payloads are bit-packed at the ladder's stored ``payload_width`` class
+    and ride in the same wire words as the ids.
+    """
+    s = ladder.s
+    c = group_size
+    ex = AdaptiveExchange(phase, axis, group_size, ladder, stats)
+    if not ladder.specs:
+        return ex.dispatch(None, [lambda _: alltoall_dense_min(ex, prop)])
+    assert ladder.payload_width > 0, (
+        "row-phase ladder must carry the parent payload: build it with "
+        "BucketLadder.default(s, floor_words=s, payload_width=...)"
+    )
+
+    bits = prop < INF
+    ids, counts = jax.vmap(lambda b: bp.compact_ids(b, s, fill=s))(bits)
+    gaps = jax.vmap(bpref.gaps_from_sorted)(ids, counts)
+    exc_counts = jnp.sum((gaps >> 16) > 0, axis=1)
+    my_bucket = jnp.max(jax.vmap(ladder.bucket_for)(counts, exc_counts))
+
+    def sparse_branch(fmt: IdStreamFormat):
+        cap = fmt.spec.cap
+
+        def run(_):
+            def pack_one(ids_d, count_d, prop_d):
+                par = prop_d[jnp.clip(ids_d[:cap], 0, s - 1)]
+                return fmt.pack(ids_d, count_d, payload=par)
+
+            words, meta = jax.vmap(pack_one)(ids, counts, prop)
+            r_words = ex.all_to_all(words, fmt=fmt.name).reshape(c, fmt.data_words)
+            r_meta = ex.all_to_all(meta, fmt=fmt.name, part="meta").reshape(c, 2)
+
+            def unpack_one(w, m):
+                u_ids, u_count, par = fmt.unpack(w, m, fill=s)
+                valid = jnp.arange(cap) < u_count
+                seg = jnp.where(valid, u_ids[:cap], s)
+                val = jnp.where(valid, par, INF)
+                return seg, val
+
+            segs, vals = jax.vmap(unpack_one)(r_words, r_meta)
+            red = jax.ops.segment_min(
+                vals.reshape(-1), segs.reshape(-1), num_segments=s + 1
+            )
+            return red[:s].astype(jnp.int32)
+
+        return run
+
+    branches = [sparse_branch(f) for f in ladder.formats()] + [
+        lambda _: alltoall_dense_min(ex, prop)
+    ]
+    return ex.dispatch(my_bucket, branches)
+
+
+# ---------------------------------------------------------------------------
+# beyond-paper: quantized all-reduce for data-parallel gradient sync
+# ---------------------------------------------------------------------------
+
+
+def allreduce_int8(
+    x: jax.Array,
+    axis,
+    group_size: int,
+    *,
+    stats: CommStats | None = None,
+    phase: str = "grad/allreduce",
+) -> jax.Array:
+    """Two-phase int8-quantized all-reduce (all_to_all scatter + all_gather).
+
+    Phase 1 *scatters* quantized shard-chunks with a tiled ``all_to_all``
+    (the static-shape stand-in for reduce_scatter: every rank receives the
+    group's copies of its own chunk and sums them locally); phase 2
+    re-quantizes the reduced chunk and ``all_gather``\\ s it.  Both wire
+    transfers carry int8 payloads + f32 scales per 128 values — ~3.8x fewer
+    bytes than an fp32 ring all-reduce.  Lossy; pair with error feedback
+    (optim/grad_compress.py).  ``x`` length must divide by
+    ``group_size * 128``.
+    """
+    n = x.shape[0]
+    assert n % (group_size * quant.GROUP) == 0, n
+    fmt = Int8Format(n)
+    ex = AdaptiveExchange(phase, axis, group_size, ladder=None, stats=stats)
+    # phase 1: quantize my shard-chunks, scatter-exchange, locally sum my chunk
+    chunks = x.reshape(group_size, n // group_size)
+    q, sc = jax.vmap(fmt.pack)(chunks)
+    q_r = ex.all_to_all(q, fmt=fmt.name, part="q").reshape(group_size, -1)
+    sc_r = ex.all_to_all(sc, fmt=fmt.name, part="scales").reshape(group_size, -1)
+    partial = jnp.sum(jax.vmap(fmt.unpack)(q_r, sc_r), axis=0)
+    # phase 2: quantize reduced chunk, all-gather
+    q2, sc2 = fmt.pack(partial)
+    q_all = ex.all_gather(q2, fmt=fmt.name, part="q")
+    sc_all = ex.all_gather(sc2, fmt=fmt.name, part="scales")
+    return fmt.unpack(q_all, sc_all).reshape(x.shape)

@@ -1,0 +1,94 @@
+"""AdaptiveExchange: one engine behind every adaptive collective.
+
+Generalizes the bucket-ladder + ``pmax`` group-consensus + ``lax.switch``
+dispatch that the BFS column and row collectives used to hand-roll
+separately, and funnels *every* collective primitive through CommStats
+byte accounting:
+
+* :meth:`dispatch` — per-rank bucket choice (from the ladder) is made
+  group-uniform with a recorded ``pmax``, then ``lax.switch`` runs the
+  branch whose collective carries exactly that bucket's words.  A
+  single-branch exchange (empty ladder, or a fixed-format plan like the
+  int8 gradient all-reduce) skips the consensus entirely — no dead
+  all-reduce in the HLO.
+* :meth:`all_gather` / :meth:`all_to_all` / :meth:`pmax` / :meth:`psum` /
+  :meth:`ppermute` — thin wrappers over ``jax.lax`` that record the
+  result-shape bytes of the op they emit, so CommStats entries correspond
+  1:1 with the collective ops the dry-run roofline parses out of HLO.
+
+Recording happens at trace time; every entry's key is static, so
+retracing is idempotent (see :mod:`repro.comm.stats`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import jax
+
+from repro.comm.ladder import BucketLadder
+from repro.comm.stats import CommStats
+
+CONSENSUS = "consensus"  # fmt label of the bucket-choice all-reduce
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaptiveExchange:
+    """One adaptive exchange site: phase name, mesh axis, ladder, stats."""
+
+    phase: str  # logical zone, e.g. "bfs/column"
+    axis: Any  # mesh axis name or tuple of names
+    group_size: int
+    ladder: BucketLadder | None = None  # None -> single fixed format
+    stats: CommStats | None = None
+
+    # -- recording collective primitives ------------------------------------
+
+    def _rec(self, fmt: str, kind: str, part: str, out: jax.Array) -> None:
+        if self.stats is not None:
+            self.stats.record_aval(self.phase, fmt, kind, part, out)
+
+    def all_gather(self, x: jax.Array, *, fmt: str, part: str = "words") -> jax.Array:
+        out = jax.lax.all_gather(x, self.axis, tiled=True)
+        self._rec(fmt, "all-gather", part, out)
+        return out
+
+    def all_to_all(self, x: jax.Array, *, fmt: str, part: str = "words") -> jax.Array:
+        out = jax.lax.all_to_all(x, self.axis, 0, 0, tiled=True)
+        self._rec(fmt, "all-to-all", part, out)
+        return out
+
+    def pmax(self, x: jax.Array, *, fmt: str = CONSENSUS, part: str = "bucket") -> jax.Array:
+        out = jax.lax.pmax(x, self.axis)
+        self._rec(fmt, "all-reduce", part, out)
+        return out
+
+    def psum(self, x: jax.Array, *, fmt: str, part: str = "value") -> jax.Array:
+        out = jax.lax.psum(x, self.axis)
+        self._rec(fmt, "all-reduce", part, out)
+        return out
+
+    def ppermute(self, x: jax.Array, perm, *, fmt: str, part: str = "words") -> jax.Array:
+        out = jax.lax.ppermute(x, self.axis, perm)
+        self._rec(fmt, "collective-permute", part, out)
+        return out
+
+    # -- adaptive dispatch ----------------------------------------------------
+
+    def dispatch(
+        self,
+        local_bucket: jax.Array | None,
+        branches: Sequence[Callable[[Any], jax.Array]],
+    ) -> jax.Array:
+        """Group-consensus branch selection.
+
+        ``branches`` is index-aligned with the ladder's sparse formats,
+        dense fallback last.  ``local_bucket`` is this rank's smallest
+        usable bucket (ignored when only one branch exists).
+        """
+        if len(branches) == 1:
+            return branches[0](None)
+        assert local_bucket is not None
+        bucket = self.pmax(local_bucket)
+        return jax.lax.switch(bucket, list(branches), operand=None)

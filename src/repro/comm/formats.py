@@ -1,0 +1,306 @@
+"""Wire formats: every static-shape representation a collective can carry.
+
+XLA collectives are static-shape — there is no ``MPI_Allgatherv``.  The
+paper's variable-length compressed exchange maps to the accelerator as a
+set of fixed-geometry *wire formats*, each knowing its word count at trace
+time and packing/unpacking payloads losslessly:
+
+* :class:`IdStreamFormat` — delta (gap) coding + vertical 16-bit binary
+  packing with *patched exceptions* (Zukowski's PFOR, static exception
+  capacity) — the paper's S4-BP128+delta in the lane-aligned layout of
+  :mod:`repro.kernels.bitpack`; optionally carries a bit-packed per-id
+  payload (candidate parents in the BFS row phase).
+* :class:`BitmapFormat` — dense width-1 membership bitmap, the always-valid
+  fallback (the paper's "adaptive data representation" row, §3.1).
+* :class:`RawIdFormat` — uncompressed 32-bit id list at full capacity (the
+  paper's Baseline).
+* :class:`DenseFormat` — uncompressed dense value vector (row-phase
+  fallback).
+* :class:`Int8Format` — block-quantized int8 payload + f32 scales per 128
+  values (beyond-paper: gradient/feature wire format).
+
+Every format exposes static geometry (``data_words``/``meta_words``/
+``wire_bytes``) consumed by the bucket ladder, CommStats, and the
+benchmarks — the single source of truth for bytes-on-the-wire.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bitpack import ops as bp
+from repro.kernels.bitpack import ref as bpref
+from repro.kernels.quant import ref as quant
+
+INF = jnp.iinfo(jnp.int32).max
+
+
+# ---------------------------------------------------------------------------
+# static-shape patched id-stream codec (PFOR-16 with exception slots)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class IdStreamSpec:
+    """Static geometry of one packed sorted-id stream.
+
+    cap: id capacity (multiple of 1024, <= 65536 so positions fit 16 bits).
+    width: low-bits width (16 covers the paper's measured 15-bit entropy).
+    """
+
+    cap: int
+    width: int = 16
+
+    def __post_init__(self):
+        assert self.cap % bpref.CHUNK == 0 and self.cap <= 1 << 16, self.cap
+        assert self.width in (8, 16), self.width
+
+    @property
+    def exc_cap(self) -> int:
+        return self.cap // 8
+
+    @property
+    def n_words(self) -> int:
+        return self.cap * self.width // 32 + self.exc_cap
+
+
+def pack_id_stream(ids: jax.Array, count: jax.Array, spec: IdStreamSpec):
+    """Sorted ids (padded, int32) + count -> (words (n_words,), meta (2,)).
+
+    meta = (count, exception_count).  Values must satisfy count <= spec.cap
+    and exception_count <= spec.exc_cap — guaranteed by bucket selection.
+    """
+    ids = ids[: spec.cap]
+    gaps = bpref.gaps_from_sorted(ids, count)  # uint32, zeros beyond count
+    mask = jnp.uint32((1 << spec.width) - 1)
+    low = gaps & mask
+    high = gaps >> spec.width
+    exc_pos, exc_count = bp.compact_ids(high > 0, spec.exc_cap, fill=spec.cap)
+    exc_val = jnp.where(
+        jnp.arange(spec.exc_cap) < exc_count,
+        high[jnp.clip(exc_pos, 0, spec.cap - 1)],
+        0,
+    ).astype(jnp.uint32)
+    exc_words = exc_pos.astype(jnp.uint32) | (exc_val << 16)
+    low_words = bp.pack(low, spec.width)
+    words = jnp.concatenate([low_words, exc_words])
+    meta = jnp.stack([count.astype(jnp.int32), exc_count.astype(jnp.int32)])
+    return words, meta
+
+
+def unpack_id_stream(words: jax.Array, meta: jax.Array, spec: IdStreamSpec, fill: int):
+    """Inverse of :func:`pack_id_stream` -> (ids (cap,) int32, count)."""
+    count, exc_count = meta[0], meta[1]
+    n_low = spec.cap * spec.width // 32
+    low = bp.unpack(words[:n_low], spec.width)
+    exc_words = words[n_low:]
+    exc_pos = (exc_words & jnp.uint32(0xFFFF)).astype(jnp.int32)
+    exc_val = exc_words >> 16
+    valid = jnp.arange(spec.exc_cap) < exc_count
+    pos = jnp.where(valid, exc_pos, spec.cap)
+    high = jnp.zeros((spec.cap + 1,), jnp.uint32).at[pos].set(exc_val)[: spec.cap]
+    gaps = low + (high << spec.width)
+    ids = bpref.sorted_from_gaps(gaps, count, fill)
+    return ids, count
+
+
+def pack_bitmap(bits: jax.Array) -> jax.Array:
+    """Dense 0/1 vector -> uint32 words (vertical width-1 packing)."""
+    return bp.pack(bits.astype(jnp.uint32), 1)
+
+
+def unpack_bitmap(words: jax.Array) -> jax.Array:
+    return bp.unpack(words, 1).astype(bool)
+
+
+# ---------------------------------------------------------------------------
+# wire-format objects
+# ---------------------------------------------------------------------------
+
+
+@runtime_checkable
+class WireFormat(Protocol):
+    """Static wire geometry of one exchange participant."""
+
+    @property
+    def name(self) -> str: ...
+
+    @property
+    def data_words(self) -> int: ...  # u32 payload words on the wire
+
+    @property
+    def meta_words(self) -> int: ...  # int32 sideband words (0 if none)
+
+    @property
+    def wire_bytes(self) -> int: ...  # total bytes per participant
+
+
+@dataclasses.dataclass(frozen=True)
+class BitmapFormat:
+    """Width-1 dense membership bitmap over ``s`` vertices."""
+
+    s: int
+
+    @property
+    def name(self) -> str:
+        return "bitmap"
+
+    @property
+    def data_words(self) -> int:
+        return self.s // 32
+
+    @property
+    def meta_words(self) -> int:
+        return 0
+
+    @property
+    def wire_bytes(self) -> int:
+        return 4 * self.data_words
+
+    def pack(self, bits: jax.Array) -> jax.Array:
+        return pack_bitmap(bits)
+
+    def unpack(self, words: jax.Array) -> jax.Array:
+        return unpack_bitmap(words)
+
+
+@dataclasses.dataclass(frozen=True)
+class IdStreamFormat:
+    """Delta + PFOR16 packed sorted-id stream, optional bit-packed payload.
+
+    The payload (``payload_width`` bits per id, 0 = none) rides in the same
+    word vector as the id stream, so one collective moves both.
+    """
+
+    spec: IdStreamSpec
+    payload_width: int = 0
+
+    @property
+    def name(self) -> str:
+        return f"pfor{self.spec.width}[{self.spec.cap}]"
+
+    @property
+    def payload_words(self) -> int:
+        return self.spec.cap * self.payload_width // 32
+
+    @property
+    def data_words(self) -> int:
+        return self.spec.n_words + self.payload_words
+
+    @property
+    def meta_words(self) -> int:
+        return 2
+
+    @property
+    def wire_bytes(self) -> int:
+        return 4 * (self.data_words + self.meta_words)
+
+    def pack(self, ids: jax.Array, count: jax.Array, payload: jax.Array | None = None):
+        """ids (>= cap, sorted, padded) + count [+ payload (cap,)] -> words, meta."""
+        words, meta = pack_id_stream(ids, count, self.spec)
+        if self.payload_width:
+            assert payload is not None
+            payload = jnp.where(
+                jnp.arange(self.spec.cap) < count, payload[: self.spec.cap], 0
+            )
+            pw = bp.pack(payload.astype(jnp.uint32), self.payload_width)
+            words = jnp.concatenate([words, pw])
+        return words, meta
+
+    def unpack(self, words: jax.Array, meta: jax.Array, fill: int):
+        """-> (ids (cap,) int32, count, payload (cap,) int32 | None)."""
+        ids, count = unpack_id_stream(words[: self.spec.n_words], meta, self.spec, fill)
+        payload = None
+        if self.payload_width:
+            payload = bp.unpack(words[self.spec.n_words :], self.payload_width).astype(
+                jnp.int32
+            )
+        return ids, count, payload
+
+
+@dataclasses.dataclass(frozen=True)
+class RawIdFormat:
+    """Uncompressed 32-bit id list at full static capacity (paper Baseline)."""
+
+    cap: int
+
+    @property
+    def name(self) -> str:
+        return "raw-id"
+
+    @property
+    def data_words(self) -> int:
+        return self.cap
+
+    @property
+    def meta_words(self) -> int:
+        return 1  # the count
+
+    @property
+    def wire_bytes(self) -> int:
+        return 4 * (self.data_words + self.meta_words)
+
+    def pack(self, bits: jax.Array):
+        ids, count = bp.compact_ids(bits, self.cap, fill=self.cap)
+        return ids, count[None].astype(jnp.int32)
+
+    def unpack(self, ids: jax.Array, meta: jax.Array, fill: int):
+        valid = jnp.arange(self.cap) < meta[0]
+        return jnp.where(valid & (ids < self.cap), ids, fill), meta[0]
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseFormat:
+    """Uncompressed dense value vector (row-phase fallback), int32."""
+
+    s: int
+
+    @property
+    def name(self) -> str:
+        return "dense-i32"
+
+    @property
+    def data_words(self) -> int:
+        return self.s
+
+    @property
+    def meta_words(self) -> int:
+        return 0
+
+    @property
+    def wire_bytes(self) -> int:
+        return 4 * self.s
+
+
+@dataclasses.dataclass(frozen=True)
+class Int8Format:
+    """Block-quantized int8 payload + one f32 scale per ``group`` values."""
+
+    n: int  # values per participant
+    group: int = quant.GROUP
+
+    @property
+    def name(self) -> str:
+        return "int8"
+
+    @property
+    def data_words(self) -> int:
+        return self.n // 4  # int8 payload measured in u32-word equivalents
+
+    @property
+    def meta_words(self) -> int:
+        return self.n // self.group  # f32 scales
+
+    @property
+    def wire_bytes(self) -> int:
+        return self.n + 4 * (self.n // self.group)
+
+    def pack(self, x: jax.Array):
+        return quant.quantize(x)
+
+    def unpack(self, q: jax.Array, scales: jax.Array) -> jax.Array:
+        return quant.dequantize(q, scales)

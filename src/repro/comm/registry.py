@@ -1,0 +1,143 @@
+"""Unified wire-plan + codec registry.
+
+Absorbs the old ``repro.compression.registry`` codec factory (paper
+§5.3/§5.4: pluggable "Factory" integration — codec choice is a config
+knob resolved *outside* the timed kernel) and adds its in-graph analog:
+**wire plans**, keyed by exchange-mode name, that build the adaptive
+column/row collectives for the distributed BFS.  New exchange patterns
+(butterfly, hierarchical) plug in as additional wire plans rather than a
+hand-rolled fourth collective.
+
+Host codecs (variable-length, numpy — benchmarks and the host Graph500
+driver) and wire plans (static-shape, in-graph) live in the same module so
+there is exactly one place a representation can be registered.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+from repro.comm import collectives as cc
+from repro.comm.engine import AdaptiveExchange
+from repro.comm.ladder import BucketLadder
+from repro.compression import codecs
+
+# ---------------------------------------------------------------------------
+# host codec factory (paper §5.3 "Factory")
+# ---------------------------------------------------------------------------
+
+_CODECS: dict[str, Callable[[], codecs.Codec]] = {}
+
+
+def register_codec(name: str, factory: Callable[[], codecs.Codec]) -> None:
+    if name in _CODECS:
+        raise ValueError(f"codec {name!r} already registered")
+    _CODECS[name] = factory
+
+
+def make_codec(name: str) -> codecs.Codec:
+    """Instantiate a codec by name (paper: Factory call before Kernel 2)."""
+    try:
+        return _CODECS[name]()
+    except KeyError:
+        raise KeyError(f"unknown codec {name!r}; known: {sorted(_CODECS)}") from None
+
+
+def available_codecs() -> list[str]:
+    return sorted(_CODECS)
+
+
+# Built-in codecs (the paper's comparison set, Table 5.4).
+register_codec("copy", codecs.Copy)
+register_codec("bp128", lambda: codecs.BP128(delta=False))
+register_codec("bp128d", lambda: codecs.BP128(delta=True))  # paper's choice: S4-BP128+delta
+register_codec("pfor", lambda: codecs.PFOR(delta=False))
+register_codec("pfor-delta", lambda: codecs.PFOR(delta=True))
+register_codec("vbyte", lambda: codecs.VByte(delta=False))
+register_codec("vbyte-delta", lambda: codecs.VByte(delta=True))
+register_codec("bitmap", codecs.Bitmap)
+
+
+# ---------------------------------------------------------------------------
+# wire plans (in-graph exchange modes)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class WirePlan:
+    """Builders for one exchange mode's column/row collectives.
+
+    ``build_column(s, axis, group_size, *, policy, stats, phase)`` returns
+    ``fn(bits (s,) bool) -> (group_size*s,) bool``; ``build_row(s, axis,
+    group_size, parent_width, *, policy, stats, phase)`` returns
+    ``fn(prop (group_size, s) i32) -> (s,) i32`` (min over senders).
+    """
+
+    name: str
+    build_column: Callable
+    build_row: Callable
+
+
+_WIRE_PLANS: dict[str, WirePlan] = {}
+
+
+def register_wire_plan(plan: WirePlan) -> None:
+    if plan.name in _WIRE_PLANS:
+        raise ValueError(f"wire plan {plan.name!r} already registered")
+    _WIRE_PLANS[plan.name] = plan
+
+
+def wire_plan(name: str) -> WirePlan:
+    try:
+        return _WIRE_PLANS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown wire plan {name!r}; known: {sorted(_WIRE_PLANS)}"
+        ) from None
+
+
+def available_wire_plans() -> list[str]:
+    return sorted(_WIRE_PLANS)
+
+
+def _raw_column(s, axis, group_size, *, policy=None, stats=None, phase="bfs/column"):
+    ex = AdaptiveExchange(phase, axis, group_size, None, stats)
+    return lambda bits: cc.gather_raw_ids(ex, bits)
+
+
+def _bitmap_column(s, axis, group_size, *, policy=None, stats=None, phase="bfs/column"):
+    ex = AdaptiveExchange(phase, axis, group_size, None, stats)
+    return lambda bits: cc.gather_bitmap(ex, bits)
+
+
+def _auto_column(s, axis, group_size, *, policy=None, stats=None, phase="bfs/column"):
+    ladder = BucketLadder.default(s, policy=policy)
+    return lambda bits: cc.allgather_membership(
+        bits, axis, ladder, group_size, stats=stats, phase=phase
+    )
+
+
+def _dense_row(
+    s, axis, group_size, parent_width, *, policy=None, stats=None, phase="bfs/row"
+):
+    ex = AdaptiveExchange(phase, axis, group_size, None, stats)
+    return lambda prop: cc.alltoall_dense_min(ex, prop)
+
+
+def _auto_row(
+    s, axis, group_size, parent_width, *, policy=None, stats=None, phase="bfs/row"
+):
+    # the row phase's dense fallback is a 32-bit candidate vector -> its own
+    # (deeper) ladder, with the parent payload priced into every bucket
+    ladder = BucketLadder.default(
+        s, floor_words=s, payload_width=parent_width, policy=policy
+    )
+    return lambda prop: cc.alltoall_min_candidates(
+        prop, axis, ladder, group_size, stats=stats, phase=phase
+    )
+
+
+register_wire_plan(WirePlan("raw", _raw_column, _dense_row))
+register_wire_plan(WirePlan("bitmap", _bitmap_column, _dense_row))
+register_wire_plan(WirePlan("auto", _auto_column, _auto_row))

@@ -1,0 +1,133 @@
+"""CommStats: byte accounting for every wire exchange.
+
+Every collective issued through :class:`repro.comm.engine.AdaptiveExchange`
+records one entry per HLO collective op it emits.  Byte counts follow the
+same convention as :func:`repro.launch.roofline.parse_collectives` so the
+two are directly comparable: **result-shape bytes per device**, with
+all-reduce counted twice (the reduce + broadcast phases of a ring).
+
+Two usage modes, not to be mixed on one instance:
+
+* **trace recording** (:meth:`CommStats.record`): called while JAX traces a
+  program.  Every entry's key ``(phase, fmt, collective, part)`` is fully
+  static, so recording is a *set*, not an append — retracing the same
+  program is idempotent, and each entry corresponds to exactly one
+  collective op in the lowered HLO.
+* **host replay accounting** (:meth:`CommStats.add`): benchmarks replaying
+  a BFS level-by-level accumulate per-zone byte totals through the same
+  object, so the byte arithmetic lives in one place (the wire formats)
+  instead of being re-derived per benchmark.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+#: multiplier parse_collectives applies per HLO op kind (ring all-reduce
+#: moves ~2x the operand: reduce phase + broadcast phase)
+HLO_FACTOR = {"all-reduce": 2}
+
+COLLECTIVE_KINDS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+
+def aval_bytes(x) -> int:
+    """Result-shape bytes of an array or tracer (bool counts as 1, = HLO pred)."""
+    n = math.prod(x.shape) if x.shape else 1
+    return int(n) * x.dtype.itemsize
+
+
+@dataclasses.dataclass
+class ExchangeRecord:
+    phase: str  # logical exchange zone, e.g. "bfs/column"
+    fmt: str  # wire-format name, e.g. "pfor16[1024]" / "bitmap" / "int8"
+    collective: str  # HLO op kind (see COLLECTIVE_KINDS)
+    part: str  # payload component: "words" | "meta" | "scales" | ...
+    nbytes: int  # total result-shape bytes per device (all instances)
+    count: int = 1  # op instances accumulated (informational)
+
+    @property
+    def hlo_bytes(self) -> int:
+        """Bytes as parse_collectives would count this entry."""
+        return self.nbytes * HLO_FACTOR.get(self.collective, 1)
+
+
+class CommStats:
+    """Keyed exchange-byte ledger; see module docstring for conventions."""
+
+    def __init__(self) -> None:
+        self._records: dict[tuple[str, str, str, str], ExchangeRecord] = {}
+
+    # -- trace-time recording (idempotent set) ------------------------------
+
+    def record(self, phase: str, fmt: str, collective: str, part: str, nbytes: int) -> None:
+        assert collective in COLLECTIVE_KINDS, collective
+        key = (phase, fmt, collective, part)
+        rec = ExchangeRecord(phase, fmt, collective, part, int(nbytes))
+        prev = self._records.get(key)
+        if prev is not None and (prev.nbytes, prev.count) != (rec.nbytes, rec.count):
+            raise ValueError(
+                f"CommStats key {key} re-recorded with different size "
+                f"({prev.nbytes}x{prev.count} -> {rec.nbytes})"
+            )
+        self._records[key] = rec
+
+    def record_aval(self, phase: str, fmt: str, collective: str, part, x) -> None:
+        """Record from a traced array's aval (shape/dtype known at trace time)."""
+        self.record(phase, fmt, collective, part, aval_bytes(x))
+
+    # -- host-replay accumulation -------------------------------------------
+
+    def add(self, phase: str, fmt: str, collective: str, nbytes: int,
+            part: str = "words", count: int = 1) -> None:
+        """Accumulate ``nbytes`` (already totaled) over ``count`` op instances."""
+        assert collective in COLLECTIVE_KINDS, collective
+        key = (phase, fmt, collective, part)
+        rec = self._records.get(key)
+        if rec is None:
+            self._records[key] = ExchangeRecord(phase, fmt, collective, part,
+                                                int(nbytes), count)
+        else:
+            rec.nbytes += int(nbytes)
+            rec.count += count
+
+    # -- views ---------------------------------------------------------------
+
+    def records(self) -> list[ExchangeRecord]:
+        return [self._records[k] for k in sorted(self._records)]
+
+    def per_phase(self) -> dict[str, int]:
+        """phase -> bytes (HLO convention, all-reduce doubled)."""
+        out: dict[str, int] = {}
+        for r in self.records():
+            out[r.phase] = out.get(r.phase, 0) + r.hlo_bytes
+        return out
+
+    def per_phase_fmt(self) -> dict[str, dict[str, int]]:
+        """phase -> fmt -> bytes (host-replay benchmark tables)."""
+        out: dict[str, dict[str, int]] = {}
+        for r in self.records():
+            out.setdefault(r.phase, {})
+            out[r.phase][r.fmt] = out[r.phase].get(r.fmt, 0) + r.hlo_bytes
+        return out
+
+    def per_op(self) -> dict[str, int]:
+        """op kind -> bytes; directly comparable to parse_collectives().per_op."""
+        out: dict[str, int] = {}
+        for r in self.records():
+            out[r.collective] = out.get(r.collective, 0) + r.hlo_bytes
+        return out
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(r.hlo_bytes for r in self.records())
+
+    def table(self) -> list[dict]:
+        """JSON-friendly dump (BENCH_comm.json, dry-run artifacts)."""
+        return [dataclasses.asdict(r) | {"hlo_bytes": r.hlo_bytes} for r in self.records()]

@@ -1,0 +1,37 @@
+"""JAX version compatibility shims.
+
+The codebase targets the modern surface (``jax.shard_map`` /
+``jax.set_mesh``, jax >= 0.6); older jaxlib images (0.4.x, as baked into
+some CI containers) only have ``jax.experimental.shard_map`` (with
+``check_rep`` instead of ``check_vma``) and ``jax.sharding.use_mesh``.
+Route through here instead of touching ``jax.*`` directly.
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool | None = None):
+    """``jax.shard_map`` with fallback to the 0.4.x experimental API."""
+    if hasattr(jax, "shard_map"):
+        kw = {} if check_vma is None else {"check_vma": check_vma}
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _sm
+
+    # 0.4.x check_rep has no replication rule for while/switch — always off
+    check_rep = False if check_vma is None else check_vma
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=check_rep)
+
+
+def set_mesh(mesh):
+    """``jax.set_mesh`` context; falls back to ``jax.sharding.use_mesh``."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if hasattr(jax.sharding, "use_mesh"):
+        return jax.sharding.use_mesh(mesh)
+    if hasattr(mesh, "__enter__"):
+        return mesh  # 0.4.x: Mesh is itself the resource-env context manager
+    return contextlib.nullcontext()

@@ -5,13 +5,20 @@ Two layers:
 * :mod:`repro.compression.codecs` — host (numpy) *variable-length* codecs, the
   faithful analog of the paper's S4-BP128 / VByte / bitmap comparison
   (Tables 5.4/5.5).  Used by benchmarks and by the host-side Graph500 driver.
-* :mod:`repro.compression.collectives` — *static-shape* compressed collectives
-  for use inside compiled JAX programs (shard_map).  XLA has no ``v``-variant
-  collectives, so runtime variable sizing is replaced by bucketed, globally
-  uniform (count-capacity, bit-width) classes — see DESIGN.md §3.
+* :mod:`repro.compression.threshold` — the §5.4.3 break-even model consulted
+  by the bucket ladders in :mod:`repro.comm`.
 
-The in-graph bit-packing itself lives in :mod:`repro.kernels.bitpack`
+The *static-shape* in-graph collectives moved to :mod:`repro.comm` (the
+unified communication plane); ``repro.compression.collectives`` and
+``repro.compression.registry`` remain as import-compatible shims.  The
+in-graph bit-packing itself lives in :mod:`repro.kernels.bitpack`
 (Pallas TPU kernel + jnp oracle).
+
+NOTE: ``registry``/``collectives`` are intentionally NOT imported here —
+they pull in :mod:`repro.comm`, which imports back into this package
+(codecs, threshold); eager imports would make package init order circular.
+``from repro.compression import registry`` still works as a submodule
+import.
 """
 
-from repro.compression import codecs, registry, threshold  # noqa: F401
+from repro.compression import codecs, threshold  # noqa: F401

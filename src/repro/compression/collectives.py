@@ -1,305 +1,31 @@
-"""Compressed collectives for shard_map programs (paper Alg. 4 on TPU).
+"""Compatibility shim — the compressed collectives moved to :mod:`repro.comm`.
 
-XLA collectives are static-shape — there is no ``MPI_Allgatherv``.  The
-paper's variable-length compressed exchange is mapped to TPU as:
+The wire-format logic (PFOR16 id streams, bitmaps, bucket ladders, the
+pmax + lax.switch adaptive dispatch) now lives in the unified communication
+plane::
 
-* **pack**: delta (gap) coding + vertical 16-bit binary packing with
-  *patched exceptions* (Zukowski's PFOR, static exception capacity) — the
-  paper's S4-BP128+delta, in the lane-aligned layout of
-  :mod:`repro.kernels.bitpack`.
-* **bucketing**: a small ladder of precompiled capacities; every rank
-  computes the bucket it needs, a ``pmax`` over the collective's axis makes
-  the choice uniform inside each communicator group, and ``lax.switch``
-  dispatches to the branch whose collective carries exactly that many words.
-  The dense-bitmap representation (= width-1 packing) is the always-valid
-  fallback — this is simultaneously the paper's "adaptive data
-  representation" row (§3.1) and its threshold mechanism (§5.4.3).
+    repro.comm.formats      # IdStreamSpec, pack/unpack, WireFormat objects
+    repro.comm.ladder       # BucketLadder (threshold-pruned)
+    repro.comm.engine       # AdaptiveExchange
+    repro.comm.collectives  # allgather_membership / alltoall_min_candidates
+                            # / allreduce_int8, byte-accounted via CommStats
 
-The collective operand genuinely shrinks in HLO, which is how the dry-run
-roofline sees the savings.
+This module re-exports the public names so existing imports keep working.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import functools
-
-import jax
-import jax.numpy as jnp
-
-from repro.kernels.bitpack import ops as bp
-from repro.kernels.bitpack import ref as bpref
-from repro.kernels.quant import ref as quant
-
-INF = jnp.iinfo(jnp.int32).max
-
-
-# ---------------------------------------------------------------------------
-# static-shape patched id-stream codec (PFOR-16 with exception slots)
-# ---------------------------------------------------------------------------
-
-
-@dataclasses.dataclass(frozen=True)
-class IdStreamSpec:
-    """Static geometry of one packed sorted-id stream.
-
-    cap: id capacity (multiple of 1024, <= 65536 so positions fit 16 bits).
-    width: low-bits width (16 covers the paper's measured 15-bit entropy).
-    """
-
-    cap: int
-    width: int = 16
-
-    def __post_init__(self):
-        assert self.cap % bpref.CHUNK == 0 and self.cap <= 1 << 16, self.cap
-        assert self.width in (8, 16), self.width
-
-    @property
-    def exc_cap(self) -> int:
-        return self.cap // 8
-
-    @property
-    def n_words(self) -> int:
-        return self.cap * self.width // 32 + self.exc_cap
-
-
-def pack_id_stream(ids: jax.Array, count: jax.Array, spec: IdStreamSpec):
-    """Sorted ids (padded, int32) + count -> (words (n_words,), meta (2,)).
-
-    meta = (count, exception_count).  Values must satisfy count <= spec.cap
-    and exception_count <= spec.exc_cap — guaranteed by bucket selection.
-    """
-    ids = ids[: spec.cap]
-    gaps = bpref.gaps_from_sorted(ids, count)  # uint32, zeros beyond count
-    mask = jnp.uint32((1 << spec.width) - 1)
-    low = gaps & mask
-    high = gaps >> spec.width
-    exc_pos, exc_count = bp.compact_ids(high > 0, spec.exc_cap, fill=spec.cap)
-    exc_val = jnp.where(
-        jnp.arange(spec.exc_cap) < exc_count,
-        high[jnp.clip(exc_pos, 0, spec.cap - 1)],
-        0,
-    ).astype(jnp.uint32)
-    exc_words = exc_pos.astype(jnp.uint32) | (exc_val << 16)
-    low_words = bp.pack(low, spec.width)
-    words = jnp.concatenate([low_words, exc_words])
-    meta = jnp.stack([count.astype(jnp.int32), exc_count.astype(jnp.int32)])
-    return words, meta
-
-
-def unpack_id_stream(words: jax.Array, meta: jax.Array, spec: IdStreamSpec, fill: int):
-    """Inverse of :func:`pack_id_stream` -> (ids (cap,) int32, count)."""
-    count, exc_count = meta[0], meta[1]
-    n_low = spec.cap * spec.width // 32
-    low = bp.unpack(words[:n_low], spec.width)
-    exc_words = words[n_low:]
-    exc_pos = (exc_words & jnp.uint32(0xFFFF)).astype(jnp.int32)
-    exc_val = exc_words >> 16
-    valid = jnp.arange(spec.exc_cap) < exc_count
-    pos = jnp.where(valid, exc_pos, spec.cap)
-    high = jnp.zeros((spec.cap + 1,), jnp.uint32).at[pos].set(exc_val)[: spec.cap]
-    gaps = low + (high << spec.width)
-    ids = bpref.sorted_from_gaps(gaps, count, fill)
-    return ids, count
-
-
-def pack_bitmap(bits: jax.Array) -> jax.Array:
-    """Dense 0/1 vector -> uint32 words (vertical width-1 packing)."""
-    return bp.pack(bits.astype(jnp.uint32), 1)
-
-
-def unpack_bitmap(words: jax.Array) -> jax.Array:
-    return bp.unpack(words, 1).astype(bool)
-
-
-# ---------------------------------------------------------------------------
-# bucket ladders
-# ---------------------------------------------------------------------------
-
-
-@dataclasses.dataclass(frozen=True)
-class BucketLadder:
-    """Sparse-id buckets (ascending capacity) + dense fallback.
-
-    ``s`` = chunk width (multiple of 1024).  ``floor_words`` is the dense
-    fallback's wire size: s/32 for membership bitmaps (column phase), s for
-    int32 candidate vectors (row phase) — the row phase therefore packs at
-    far higher densities.  ``payload_width`` adds per-id payload words
-    (packed parents) to each bucket's cost when deciding usability."""
-
-    s: int
-    specs: tuple[IdStreamSpec, ...]
-    floor_words: int
-
-    @classmethod
-    def default(
-        cls, s: int, floor_words: int | None = None, payload_width: int = 0
-    ) -> "BucketLadder":
-        floor = floor_words if floor_words is not None else s // 32
-        caps: list[int] = []
-        for frac in (256, 64, 16, 4):
-            cap = max(s // frac, bpref.CHUNK)
-            cap = min(cap, 1 << 16)
-            wire = IdStreamSpec(cap).n_words + cap * payload_width // 32
-            # only keep buckets that genuinely undercut the dense floor
-            if cap < s and cap not in caps and wire < floor:
-                caps.append(cap)
-        return cls(s=s, specs=tuple(IdStreamSpec(c) for c in sorted(caps)), floor_words=floor)
-
-    @property
-    def n_branches(self) -> int:
-        return len(self.specs) + 1  # + dense fallback
-
-    def bucket_for(self, count: jax.Array, exc_count: jax.Array) -> jax.Array:
-        """Smallest usable bucket index for this rank (before pmax)."""
-        b = jnp.int32(len(self.specs))  # dense fallback
-        for i in range(len(self.specs) - 1, -1, -1):
-            ok = (count <= self.specs[i].cap) & (exc_count <= self.specs[i].exc_cap)
-            b = jnp.where(ok, jnp.int32(i), b)
-        return b
-
-    def words_for_branch(self, i: int, payload_width: int = 0) -> int:
-        if i < len(self.specs):
-            return self.specs[i].n_words + self.specs[i].cap * payload_width // 32
-        return self.floor_words
-
-
-def _stream_stats(bits: jax.Array, s: int):
-    """ids (s,), count, exception count of the gap stream (for bucketing)."""
-    ids, count = bp.compact_ids(bits, s, fill=s)
-    gaps = bpref.gaps_from_sorted(ids, count)
-    exc_count = jnp.sum((gaps >> 16) > 0)
-    return ids, count, exc_count
-
-
-# ---------------------------------------------------------------------------
-# compressed collectives
-# ---------------------------------------------------------------------------
-
-
-def allgather_membership(bits: jax.Array, axis, ladder: BucketLadder, group_size: int):
-    """Compressed all-gather of a membership vector (paper's column phase).
-
-    Every rank contributes an ``(s,)`` bool vector; returns the
-    ``(group_size * s,)`` concatenation.  The transported representation is
-    chosen per communicator group via pmax + lax.switch.
-    """
-    s = ladder.s
-    ids, count, exc_count = _stream_stats(bits, s)
-    bucket = jax.lax.pmax(ladder.bucket_for(count, exc_count), axis)
-
-    def sparse_branch(spec: IdStreamSpec):
-        def run(_):
-            words, meta = pack_id_stream(ids, count, spec)
-            g_words = jax.lax.all_gather(words, axis, tiled=True)
-            g_meta = jax.lax.all_gather(meta, axis, tiled=True).reshape(group_size, 2)
-            g_words = g_words.reshape(group_size, spec.n_words)
-            u_ids, u_counts = jax.vmap(
-                lambda w, m: unpack_id_stream(w, m, spec, fill=s)
-            )(g_words, g_meta)
-            # scatter memberships into the concatenated vector
-            offs = (jnp.arange(group_size, dtype=jnp.int32) * s)[:, None]
-            flat = jnp.where(u_ids < s, u_ids + offs, group_size * s).reshape(-1)
-            out = jnp.zeros((group_size * s + 1,), bool).at[flat].set(True)
-            return out[: group_size * s]
-
-        return run
-
-    def bitmap_branch(_):
-        words = pack_bitmap(bits)
-        g = jax.lax.all_gather(words, axis, tiled=True)
-        return unpack_bitmap(g)
-
-    branches = [sparse_branch(spec) for spec in ladder.specs] + [bitmap_branch]
-    return jax.lax.switch(bucket, branches, operand=None)
-
-
-def alltoall_min_candidates(
-    prop: jax.Array,
-    axis: str,
-    ladder: BucketLadder,
-    group_size: int,
-    parent_width: int,
-):
-    """Compressed all-to-all + min-reduce of candidate parents (row phase).
-
-    ``prop``: (group_size, s) int32 — proposal subchunk per destination rank
-    (INF = no candidate).  Returns (s,) int32 min over all senders of the
-    subchunk addressed to this rank.  Ids are delta+patched-packed; parent
-    payloads are packed at the static ``parent_width`` class.
-    """
-    s = ladder.s
-    c = group_size
-    bits = prop < INF
-    ids, counts = jax.vmap(lambda b: bp.compact_ids(b, s, fill=s))(bits)
-    gaps = jax.vmap(bpref.gaps_from_sorted)(ids, counts)
-    exc_counts = jnp.sum((gaps >> 16) > 0, axis=1)
-    my_bucket = jnp.max(jax.vmap(ladder.bucket_for)(counts, exc_counts))
-    bucket = jax.lax.pmax(my_bucket, axis)
-
-    def sparse_branch(spec: IdStreamSpec):
-        def run(_):
-            def pack_one(ids_d, count_d, prop_d):
-                w, m = pack_id_stream(ids_d, count_d, spec)
-                par = prop_d[jnp.clip(ids_d[: spec.cap], 0, s - 1)]
-                par = jnp.where(jnp.arange(spec.cap) < count_d, par, 0)
-                pw = bp.pack(par.astype(jnp.uint32), parent_width)
-                return w, m, pw
-
-            idw, meta, parw = jax.vmap(pack_one)(ids, counts, prop)
-            r_idw = jax.lax.all_to_all(idw, axis, 0, 0, tiled=True).reshape(
-                c, spec.n_words
-            )
-            r_meta = jax.lax.all_to_all(meta, axis, 0, 0, tiled=True).reshape(c, 2)
-            r_parw = jax.lax.all_to_all(parw, axis, 0, 0, tiled=True).reshape(
-                c, spec.cap * parent_width // 32
-            )
-
-            def unpack_one(w, m, pw):
-                u_ids, u_count = unpack_id_stream(w, m, spec, fill=s)
-                par = bp.unpack(pw, parent_width).astype(jnp.int32)
-                valid = jnp.arange(spec.cap) < u_count
-                seg = jnp.where(valid, u_ids[: spec.cap], s)
-                val = jnp.where(valid, par, INF)
-                return seg, val
-
-            segs, vals = jax.vmap(unpack_one)(r_idw, r_meta, r_parw)
-            red = jax.ops.segment_min(vals.reshape(-1), segs.reshape(-1), num_segments=s + 1)
-            return red[:s].astype(jnp.int32)
-
-        return run
-
-    def dense_branch(_):
-        recv = jax.lax.all_to_all(prop, axis, 0, 0, tiled=True).reshape(c, s)
-        return jnp.min(recv, axis=0)
-
-    branches = [sparse_branch(spec) for spec in ladder.specs] + [dense_branch]
-    return jax.lax.switch(bucket, branches, operand=None)
-
-
-# ---------------------------------------------------------------------------
-# beyond-paper: quantized all-reduce for data-parallel gradient sync
-# ---------------------------------------------------------------------------
-
-
-def allreduce_int8(x: jax.Array, axis, group_size: int) -> jax.Array:
-    """Two-phase int8-quantized all-reduce (reduce_scatter + all_gather).
-
-    Both wire transfers carry int8 payloads + f32 scales per 128 values —
-    ~3.8x fewer bytes than an fp32 ring all-reduce.  Lossy; pair with error
-    feedback (optim/grad_compress.py).  ``x`` length must divide by
-    group_size * 128.
-    """
-    n = x.shape[0]
-    assert n % (group_size * quant.GROUP) == 0, n
-    # phase 1: quantize my shard-chunks, exchange, locally sum my chunk
-    chunks = x.reshape(group_size, n // group_size)
-    q, sc = jax.vmap(quant.quantize)(chunks)
-    q_r = jax.lax.all_to_all(q, axis, 0, 0, tiled=True).reshape(group_size, -1)
-    sc_r = jax.lax.all_to_all(sc, axis, 0, 0, tiled=True).reshape(group_size, -1)
-    partial = jnp.sum(jax.vmap(quant.dequantize)(q_r, sc_r), axis=0)
-    # phase 2: quantize reduced chunk, all-gather
-    q2, sc2 = quant.quantize(partial)
-    q_all = jax.lax.all_gather(q2, axis, tiled=True)
-    sc_all = jax.lax.all_gather(sc2, axis, tiled=True)
-    return quant.dequantize(q_all, sc_all).reshape(x.shape)
+from repro.comm.collectives import (  # noqa: F401
+    allgather_membership,
+    allreduce_int8,
+    alltoall_min_candidates,
+)
+from repro.comm.formats import (  # noqa: F401
+    INF,
+    IdStreamSpec,
+    pack_bitmap,
+    pack_id_stream,
+    unpack_bitmap,
+    unpack_id_stream,
+)
+from repro.comm.ladder import BucketLadder, stream_stats as _stream_stats  # noqa: F401

@@ -1,45 +1,15 @@
-"""Codec factory (paper §5.3/§5.4: pluggable "Factory" integration).
+"""Compatibility shim — the codec factory was absorbed into the unified
+wire-plan registry at :mod:`repro.comm.registry`.
 
-The paper integrates three 3rd-party compression libraries behind a factory
-object created *outside* the timed BFS kernel so that codec choice is a
-config knob, and new codecs can be added without touching the BFS.  This
-module is that factory.  ``make_codec`` is called once by the driver; the
-returned codec object is passed by reference into the communication layer.
+``make_codec`` / ``available`` / ``register`` keep their old names here;
+new code should use ``repro.comm.registry`` directly (which also registers
+the in-graph wire plans next to the host codecs).
 """
 
 from __future__ import annotations
 
-from typing import Callable
-
-from repro.compression import codecs
-
-_REGISTRY: dict[str, Callable[[], codecs.Codec]] = {}
-
-
-def register(name: str, factory: Callable[[], codecs.Codec]) -> None:
-    if name in _REGISTRY:
-        raise ValueError(f"codec {name!r} already registered")
-    _REGISTRY[name] = factory
-
-
-def make_codec(name: str) -> codecs.Codec:
-    """Instantiate a codec by name (paper: Factory call before Kernel 2)."""
-    try:
-        return _REGISTRY[name]()
-    except KeyError:
-        raise KeyError(f"unknown codec {name!r}; known: {sorted(_REGISTRY)}") from None
-
-
-def available() -> list[str]:
-    return sorted(_REGISTRY)
-
-
-# Built-in codecs (the paper's comparison set, Table 5.4).
-register("copy", codecs.Copy)
-register("bp128", lambda: codecs.BP128(delta=False))
-register("bp128d", lambda: codecs.BP128(delta=True))  # paper's choice: S4-BP128+delta
-register("pfor", lambda: codecs.PFOR(delta=False))
-register("pfor-delta", lambda: codecs.PFOR(delta=True))
-register("vbyte", lambda: codecs.VByte(delta=False))
-register("vbyte-delta", lambda: codecs.VByte(delta=True))
-register("bitmap", codecs.Bitmap)
+from repro.comm.registry import (  # noqa: F401
+    available_codecs as available,
+    make_codec,
+    register_codec as register,
+)

@@ -69,3 +69,31 @@ class ThresholdPolicy:
         """Transfer-time speedup of compressed vs plain under this model."""
         plain_s, comp_s = self._times(n_ints, ratio, same_host)
         return plain_s / comp_s
+
+    def should_pack(
+        self,
+        n_values: int,
+        packed_words: int,
+        dense_words: int,
+        stream_len: int | None = None,
+        same_host: bool = False,
+    ) -> bool:
+        """Static-shape break-even for the in-graph packed wire formats.
+
+        Unlike :meth:`should_compress` (host codec over a variable-length
+        buffer), the in-graph codec touches exactly ``n_values`` bucket
+        slots and ships ``packed_words`` u32 words against a dense fallback
+        of ``dense_words`` words.  ``stream_len`` (the logical vector length
+        ``s``) gates the paper's §5.4.3 minimum-size rule.  Consulted by
+        :meth:`repro.comm.ladder.BucketLadder.default` when pruning buckets.
+        """
+        if stream_len is not None and stream_len < self.min_ints:
+            return False
+        bw = (self.same_host_bandwidth_gBps if same_host else self.link_bandwidth_gBps) * 1e9
+        plain_s = dense_words * 4 / bw
+        comp_s = (
+            n_values / (self.codec_speed_mips * 1e6)
+            + packed_words * 4 / bw
+            + n_values / (self.codec_dspeed_mips * 1e6)
+        )
+        return comp_s < plain_s

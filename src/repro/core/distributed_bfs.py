@@ -1,4 +1,5 @@
-"""2D-partitioned distributed BFS with compressed collectives (paper Alg. 4).
+"""2D-partitioned distributed BFS with adaptive compressed collectives
+(paper Alg. 4).
 
 One BFS level on the R x C grid (rank (i, j) holds block A_ij, owns vertex
 chunk q = i*C + j of width s):
@@ -17,9 +18,14 @@ chunk q = i*C + j of width s):
      min-reduces into its owned chunk.
   5. frontier/parent/level update, global ``psum`` termination test.
 
-Modes: 'raw' (uncompressed id lists — the paper's Baseline), 'bitmap'
-(dense 1-bit membership), 'auto' (bucketed adaptive — the paper's
-compression + adaptive-representation stack).
+Modes are *wire plans* resolved through :mod:`repro.comm.registry`:
+'raw' (uncompressed id lists — the paper's Baseline), 'bitmap' (dense
+1-bit membership), 'auto' (bucketed adaptive — the paper's compression +
+adaptive-representation stack).  Every collective — including the
+transpose permute and the termination psum — reports its wire bytes
+through :class:`repro.comm.CommStats`, so the accounting can be checked
+1:1 against the collective operand sizes in the lowered HLO
+(:func:`repro.launch.roofline.compare_comm_stats`).
 """
 
 from __future__ import annotations
@@ -33,9 +39,10 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
-from repro.compression import collectives as cc
+from repro import compat
+from repro.comm import AdaptiveExchange, CommStats, ThresholdPolicy
+from repro.comm import registry as wire_registry
 from repro.core.csr import BlockedGraph, Partition2D
-from repro.kernels.bitpack import ops as bp
 from repro.kernels.bitpack.ref import B_CLASSES
 
 INF = jnp.iinfo(jnp.int32).max
@@ -45,7 +52,7 @@ INF = jnp.iinfo(jnp.int32).max
 class DistBFSConfig:
     row_axes: tuple[str, ...] = ("data",)  # mesh axes spanning grid rows (R)
     col_axis: str = "model"  # mesh axis spanning grid columns (C)
-    mode: str = "auto"  # 'raw' | 'bitmap' | 'auto'
+    mode: str = "auto"  # wire-plan name: 'raw' | 'bitmap' | 'auto'
     max_levels: int = 64
 
     @property
@@ -70,7 +77,16 @@ class _Carry(NamedTuple):
     active: jax.Array
 
 
-def _bfs_local(src_l, dst_l, root, *, part: Partition2D, cfg: DistBFSConfig):
+def _bfs_local(
+    src_l,
+    dst_l,
+    root,
+    *,
+    part: Partition2D,
+    cfg: DistBFSConfig,
+    stats: CommStats | None = None,
+    policy: ThresholdPolicy | None = None,
+):
     """Per-rank body (inside shard_map). src_l/dst_l: (1,..,1,e_cap)."""
     src_l = src_l.reshape(-1)
     dst_l = dst_l.reshape(-1)
@@ -81,39 +97,27 @@ def _bfs_local(src_l, dst_l, root, *, part: Partition2D, cfg: DistBFSConfig):
     q = i * c + j
     base = q * s
     p_width = parent_width_class(n_c)
-    # column phase competes against a 1-bit/vertex bitmap; the row phase's
-    # dense fallback is a 32-bit candidate vector -> its own (deeper) ladder
-    col_ladder = cc.BucketLadder.default(s)
-    row_ladder = cc.BucketLadder.default(s, floor_words=s, payload_width=p_width)
     perm = part.transpose_perm()
+
+    # mode selection through the unified wire-plan registry: the plan builds
+    # both adaptive exchanges (ladders, formats, engine, stats) for this site
+    plan = wire_registry.wire_plan(cfg.mode)
+    column_gather = plan.build_column(
+        s, cfg.row_axes, r, policy=policy, stats=stats, phase="bfs/column"
+    )
+    row_exchange = plan.build_row(
+        s, cfg.col_axis, c, p_width, policy=policy, stats=stats, phase="bfs/row"
+    )
+    # non-adaptive exchanges report through the same engine facade
+    ex_transpose = AdaptiveExchange("bfs/transpose", cfg.all_axes, r * c, None, stats)
+    ex_term = AdaptiveExchange("bfs/termination", cfg.all_axes, r * c, None, stats)
 
     idx_global = base + jnp.arange(s, dtype=jnp.int32)
     root32 = root.astype(jnp.int32)
 
-    def column_gather(bits_t):
-        if cfg.mode == "auto":
-            return cc.allgather_membership(bits_t, cfg.row_axes, col_ladder, r)
-        if cfg.mode == "bitmap":
-            words = cc.pack_bitmap(bits_t)
-            return cc.unpack_bitmap(jax.lax.all_gather(words, cfg.row_axes, tiled=True))
-        # raw: uncompressed 32-bit id list of full capacity (paper Baseline)
-        ids, count = bp.compact_ids(bits_t, s, fill=s)
-        g_ids = jax.lax.all_gather(ids, cfg.row_axes, tiled=True).reshape(r, s)
-        g_cnt = jax.lax.all_gather(count[None], cfg.row_axes, tiled=True).reshape(r)
-        offs = (jnp.arange(r, dtype=jnp.int32) * s)[:, None]
-        valid = jnp.arange(s)[None, :] < g_cnt[:, None]
-        flat = jnp.where(valid & (g_ids < s), g_ids + offs, r * s).reshape(-1)
-        return jnp.zeros((r * s + 1,), bool).at[flat].set(True)[: r * s]
-
-    def row_exchange(prop):
-        if cfg.mode == "auto":
-            return cc.alltoall_min_candidates(prop, cfg.col_axis, row_ladder, c, p_width)
-        recv = jax.lax.all_to_all(prop, cfg.col_axis, 0, 0, tiled=True).reshape(c, s)
-        return jnp.min(recv, axis=0)
-
     def level_step(carry: _Carry) -> _Carry:
         # 1. TransposeVector
-        bits_t = jax.lax.ppermute(carry.frontier, cfg.all_axes, perm)
+        bits_t = ex_transpose.ppermute(carry.frontier, perm, fmt="membership")
         # 2. column phase: assemble f_j (n_c,) membership
         f_col = column_gather(bits_t)
         # 3. local SpMV over block edges
@@ -124,7 +128,7 @@ def _bfs_local(src_l, dst_l, root, *, part: Partition2D, cfg: DistBFSConfig):
         reduced = row_exchange(prop.reshape(c, s))
         # 5. update owned state
         new = (reduced < INF) & (carry.parent < 0)
-        n_new = jax.lax.psum(jnp.sum(new.astype(jnp.int32)), cfg.all_axes)
+        n_new = ex_term.psum(jnp.sum(new.astype(jnp.int32)), fmt="termination")
         return _Carry(
             parent=jnp.where(new, reduced, carry.parent),
             level=jnp.where(new, carry.depth + 1, carry.level),
@@ -145,16 +149,25 @@ def _bfs_local(src_l, dst_l, root, *, part: Partition2D, cfg: DistBFSConfig):
 
 
 def build_bfs(
-    mesh: Mesh, bg: BlockedGraph | Partition2D, cfg: DistBFSConfig | None = None
+    mesh: Mesh,
+    bg: BlockedGraph | Partition2D,
+    cfg: DistBFSConfig | None = None,
+    *,
+    stats: CommStats | None = None,
+    policy: ThresholdPolicy | None = None,
 ):
     """Compile the distributed BFS for a mesh. Returns fn(src_l, dst_l, root)
     -> (parent (n,), level (n,), n_levels) with outputs sharded over all axes.
 
     ``bg`` may be a BlockedGraph (runnable) or a bare Partition2D (dry-run
-    lowering against ShapeDtypeStructs)."""
+    lowering against ShapeDtypeStructs).  ``stats``, if given, is filled at
+    trace time with one entry per collective op the program emits (idempotent
+    across retraces).  ``policy`` tunes the bucket ladders' break-even
+    pruning (default: the TPU-link ThresholdPolicy)."""
     cfg = cfg or DistBFSConfig(
         row_axes=tuple(mesh.axis_names[:-1]), col_axis=mesh.axis_names[-1]
     )
+    wire_registry.wire_plan(cfg.mode)  # fail on unknown modes at build time
     part = bg if isinstance(bg, Partition2D) else bg.part
     assert part.rows == functools.reduce(
         lambda a, b: a * b, (mesh.shape[a] for a in cfg.row_axes)
@@ -169,8 +182,10 @@ def build_bfs(
     blk_spec = P(*cfg.row_axes, cfg.col_axis, None)
     out_spec = P(cfg.all_axes)
 
-    local = functools.partial(_bfs_local, part=part, cfg=cfg)
-    mapped = jax.shard_map(
+    local = functools.partial(
+        _bfs_local, part=part, cfg=cfg, stats=stats, policy=policy
+    )
+    mapped = compat.shard_map(
         local,
         mesh=mesh,
         in_specs=(blk_spec, blk_spec, P()),

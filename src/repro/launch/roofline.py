@@ -136,6 +136,46 @@ def parse_collectives(hlo_text: str, loop_mult: float = 1.0) -> CollectiveStats:
 
 
 @dataclasses.dataclass
+class CommStatsComparison:
+    """CommStats-expected vs HLO-parsed collective bytes, per op kind."""
+
+    expected: dict[str, int]  # op kind -> bytes, from CommStats (loop body, x1)
+    parsed: dict[str, int]  # op kind -> bytes, from parse_collectives
+    per_phase: dict[str, int]  # CommStats phase -> bytes
+
+    @property
+    def match(self) -> bool:
+        keys = set(self.expected) | set(self.parsed)
+        return all(self.expected.get(k, 0) == self.parsed.get(k, 0) for k in keys)
+
+    def diff(self) -> dict[str, tuple[int, int]]:
+        keys = set(self.expected) | set(self.parsed)
+        return {
+            k: (self.expected.get(k, 0), self.parsed.get(k, 0))
+            for k in sorted(keys)
+            if self.expected.get(k, 0) != self.parsed.get(k, 0)
+        }
+
+
+def compare_comm_stats(stats, hlo_text: str) -> CommStatsComparison:
+    """Check CommStats accounting against the compiled program's HLO.
+
+    ``stats`` is a :class:`repro.comm.CommStats` filled at trace time (one
+    entry per collective op); ``hlo_text`` the post-optimization HLO of the
+    same program.  Both sides use the per-device result-shape convention
+    with ring all-reduce counted 2x, and neither scales loop bodies
+    (``loop_mult=1``), so the totals must agree per op kind if the
+    accounting is faithful.
+    """
+    parsed = parse_collectives(hlo_text, loop_mult=1.0)
+    return CommStatsComparison(
+        expected=stats.per_op(),
+        parsed=dict(parsed.per_op),
+        per_phase=stats.per_phase(),
+    )
+
+
+@dataclasses.dataclass
 class RooflineTerms:
     compute_s: float
     memory_s: float

@@ -31,6 +31,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.core.csr import Partition2D
 from repro.kernels.quant import ref as quant
 
@@ -329,7 +330,7 @@ def build_2d_train_step(
     own = P(*dcfg.row_axes, dcfg.col_axis, None)
     own_flat = P(*dcfg.row_axes, dcfg.col_axis)
     in_specs = (P(), own, own, own, own, own_flat)
-    mapped = jax.shard_map(
+    mapped = compat.shard_map(
         local,
         mesh=mesh,
         in_specs=in_specs,

@@ -21,7 +21,8 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.compression import collectives as cc
+from repro.comm import CommStats
+from repro.comm import collectives as cc
 from repro.kernels.quant import ref as quant
 
 
@@ -66,23 +67,35 @@ def ef_step(grads: Any, state: EFState) -> tuple[Any, EFState]:
     )
 
 
-def dp_allreduce_int8(grads: Any, state: EFState, axis, group_size: int):
+def dp_allreduce_int8(
+    grads: Any,
+    state: EFState,
+    axis,
+    group_size: int,
+    stats: CommStats | None = None,
+):
     """Full distributed EF int8 gradient mean over a mesh axis.
 
     For use inside shard_map over the DP axis: quantize (g + e), reduce via
-    int8 all-to-all + all-gather, keep the residual locally.
+    the comm plane's int8 all_to_all + all_gather, keep the residual
+    locally.  ``stats``, if given, collects the per-leaf wire bytes.
     """
 
-    def one(g, e):
+    def one(g, e, leaf: int):
         corrected = g.astype(jnp.float32) + e
         flat, n = _pad_to(corrected, group_size * quant.GROUP)
-        reduced = cc.allreduce_int8(flat, axis, group_size) / group_size
+        reduced = (
+            cc.allreduce_int8(
+                flat, axis, group_size, stats=stats, phase=f"grad/allreduce[{leaf}]"
+            )
+            / group_size
+        )
         sent = compress_decompress(corrected)
         return reduced[:n].reshape(g.shape).astype(g.dtype), corrected - sent
 
     flat_g, treedef = jax.tree.flatten(grads)
     flat_e = treedef.flatten_up_to(state.residual)
-    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    out = [one(g, e, k) for k, (g, e) in enumerate(zip(flat_g, flat_e))]
     return (
         treedef.unflatten([o[0] for o in out]),
         EFState(residual=treedef.unflatten([o[1] for o in out])),

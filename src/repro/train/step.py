@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.optim import adamw, grad_compress
 
 
@@ -78,7 +79,7 @@ def make_dp_train_step(
 
     rep = P()
     batch_spec = P(dp_axis)
-    mapped = jax.shard_map(
+    mapped = compat.shard_map(
         local_step,
         mesh=mesh,
         in_specs=(rep, batch_spec),

@@ -1,0 +1,58 @@
+"""Minimal deterministic stand-in for Hypothesis.
+
+Loaded by the root conftest.py ONLY when the real ``hypothesis`` package is
+unavailable (see pyproject.toml's test extra for the real dependency).
+Covers exactly the API surface this repo's tests use:
+
+    @settings(max_examples=N, deadline=None)
+    @given(x=st.integers(lo, hi), y=st.floats(lo, hi))
+
+``given`` degrades the property test to ``max_examples`` seeded-random
+samples per strategy, always including the boundary values first.  No
+shrinking, no database — but every property still runs against the
+boundaries plus a deterministic random sweep.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+
+from hypothesis import strategies  # noqa: F401  (re-export: `from hypothesis import strategies as st`)
+
+__version__ = "0.0.0-shim"
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    """Decorator recording max_examples; composes with ``given`` either side."""
+
+    def deco(f):
+        f._hyp_max_examples = max_examples
+        return f
+
+    return deco
+
+
+def given(*arg_strats, **kw_strats):
+    if arg_strats:
+        raise TypeError("shim supports keyword strategies only (as this repo uses)")
+
+    def deco(f):
+        @functools.wraps(f)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_hyp_max_examples", _DEFAULT_MAX_EXAMPLES)
+            rng = random.Random(f.__qualname__)  # deterministic per test
+            for i in range(n):
+                drawn = {k: s.draw(rng, i) for k, s in kw_strats.items()}
+                f(*args, **{**kwargs, **drawn})
+
+        # pytest must not see the strategy-filled params as fixtures
+        sig = inspect.signature(f)
+        remaining = [p for name, p in sig.parameters.items() if name not in kw_strats]
+        wrapper.__signature__ = sig.replace(parameters=remaining)
+        wrapper.__dict__.pop("__wrapped__", None)
+        return wrapper
+
+    return deco

@@ -1,0 +1,55 @@
+"""Strategy objects for the Hypothesis shim (boundaries first, then seeded
+random draws).  Only the strategies this repo's tests use."""
+
+from __future__ import annotations
+
+import dataclasses
+import random
+
+
+@dataclasses.dataclass(frozen=True)
+class _Integers:
+    min_value: int
+    max_value: int
+
+    def draw(self, rng: random.Random, i: int) -> int:
+        if i == 0:
+            return self.min_value
+        if i == 1:
+            return self.max_value
+        return rng.randint(self.min_value, self.max_value)
+
+
+@dataclasses.dataclass(frozen=True)
+class _Floats:
+    min_value: float
+    max_value: float
+
+    def draw(self, rng: random.Random, i: int) -> float:
+        if i == 0:
+            return self.min_value
+        if i == 1:
+            return self.max_value
+        return rng.uniform(self.min_value, self.max_value)
+
+
+@dataclasses.dataclass(frozen=True)
+class _SampledFrom:
+    elements: tuple
+
+    def draw(self, rng: random.Random, i: int):
+        if i < len(self.elements):
+            return self.elements[i]
+        return rng.choice(self.elements)
+
+
+def sampled_from(elements) -> _SampledFrom:
+    return _SampledFrom(tuple(elements))
+
+
+def integers(min_value: int, max_value: int) -> _Integers:
+    return _Integers(min_value, max_value)
+
+
+def floats(min_value: float, max_value: float, **_kw) -> _Floats:
+    return _Floats(min_value, max_value)

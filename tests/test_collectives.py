@@ -3,9 +3,11 @@ the collective paths are covered by tests/test_dist.py subprocesses)."""
 
 import numpy as np
 import jax.numpy as jnp
+import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
+from repro import comm
 from repro.compression import collectives as cc
 
 
@@ -69,3 +71,119 @@ def test_compressed_words_beat_bitmap_beat_raw():
     assert sparse_words < bitmap_words < raw_words
     # data reduction vs raw exceeds the paper's 90% once sparse bucket hits
     assert 1 - sparse_words / raw_words > 0.90
+
+
+# ---------------------------------------------------------------------------
+# geometry-boundary round trips + engine bucket choice (repro.comm)
+# ---------------------------------------------------------------------------
+
+
+def test_id_stream_roundtrip_count_at_cap():
+    """count == cap: every slot carries a real id, none spill."""
+    cap = 1024
+    spec = comm.IdStreamSpec(cap=cap)
+    ids = (np.arange(cap, dtype=np.int64) * 3 + 1).astype(np.int32)  # no exceptions
+    words, meta = comm.pack_id_stream(jnp.asarray(ids), jnp.int32(cap), spec)
+    assert int(meta[0]) == cap and int(meta[1]) == 0
+    out, count = comm.unpack_id_stream(words, meta, spec, fill=-1)
+    assert int(count) == cap
+    np.testing.assert_array_equal(np.asarray(out), ids)
+
+
+def test_id_stream_roundtrip_exceptions_at_cap():
+    """exc_count == exc_cap: the exception area is exactly full."""
+    cap = 1024
+    spec = comm.IdStreamSpec(cap=cap)
+    count = 256
+    gaps = np.ones(count, np.int64)
+    gaps[:spec.exc_cap] = 1 << 17  # exactly exc_cap gaps overflow 16 bits
+    ids = np.cumsum(gaps).astype(np.int32)
+    padded = np.zeros(cap, np.int32)
+    padded[:count] = ids
+    words, meta = comm.pack_id_stream(jnp.asarray(padded), jnp.int32(count), spec)
+    assert int(meta[1]) == spec.exc_cap
+    out, out_count = comm.unpack_id_stream(words, meta, spec, fill=-1)
+    assert int(out_count) == count
+    np.testing.assert_array_equal(np.asarray(out)[:count], ids)
+
+
+def test_id_stream_roundtrip_empty():
+    """count == 0: meta is all-zero and unpack returns only fill."""
+    cap = 1024
+    spec = comm.IdStreamSpec(cap=cap)
+    words, meta = comm.pack_id_stream(jnp.zeros(cap, jnp.int32), jnp.int32(0), spec)
+    assert int(meta[0]) == 0 and int(meta[1]) == 0
+    out, count = comm.unpack_id_stream(words, meta, spec, fill=7)
+    assert int(count) == 0
+    assert np.all(np.asarray(out) == 7)
+
+
+def test_ladder_stores_payload_width():
+    """payload_width lives on the ladder: words_for_branch needs no re-pass
+    and the per-bucket formats bake it in."""
+    ladder = comm.BucketLadder.default(1 << 16, floor_words=1 << 16, payload_width=16)
+    assert ladder.payload_width == 16
+    assert len(ladder.specs) >= 2
+    for i, f in enumerate(ladder.formats()):
+        assert f.payload_width == 16
+        assert ladder.words_for_branch(i) == f.data_words
+    # the payload makes every bucket strictly wider than the payload-free one
+    bare = comm.BucketLadder.default(1 << 16, floor_words=1 << 16)
+    for i in range(min(len(ladder.specs), len(bare.specs))):
+        assert ladder.words_for_branch(i) > bare.words_for_branch(i)
+
+
+def test_bucket_choice_monotone_in_count_and_exceptions():
+    """Ladder bucket choice is monotone: more ids (or more exceptions)
+    never selects a smaller capacity class."""
+    s = 1 << 16
+    ladder = comm.BucketLadder.default(s, floor_words=s)
+    assert len(ladder.specs) >= 2
+    prev = 0
+    for count in range(0, s + 1, 4096):
+        b = int(ladder.bucket_for(jnp.int32(count), jnp.int32(0)))
+        assert b >= prev, (count, b, prev)
+        prev = b
+    assert prev == len(ladder.specs)  # full count lands on the dense fallback
+    prev = 0
+    for exc in range(0, ladder.specs[-1].exc_cap + 2, 64):
+        b = int(ladder.bucket_for(jnp.int32(10), jnp.int32(exc)))
+        assert b >= prev, (exc, b, prev)
+        prev = b
+
+
+@pytest.mark.slow
+def test_adaptive_exchange_bucket_choice_monotone():
+    """End-to-end through AdaptiveExchange.dispatch: denser memberships
+    dispatch to monotonically larger branches, and the consensus pmax is
+    byte-accounted."""
+    import functools
+
+    import jax
+    from jax.sharding import PartitionSpec as P
+
+    from repro import compat
+
+    s = 1 << 16
+    ladder = comm.BucketLadder.default(s, floor_words=s)
+    mesh = jax.make_mesh((1,), ("x",))
+    stats = comm.CommStats()
+
+    def which_branch(bits):
+        ex = comm.AdaptiveExchange("test", "x", 1, ladder, stats)
+        _, count, exc = comm.stream_stats(bits, s)
+        branches = [
+            functools.partial(lambda i, _: jnp.int32(i), i)
+            for i in range(ladder.n_branches)
+        ]
+        return ex.dispatch(ladder.bucket_for(count, exc), branches)
+
+    f = jax.jit(compat.shard_map(which_branch, mesh=mesh, in_specs=P(), out_specs=P()))
+    rng = np.random.default_rng(0)
+    prev = 0
+    for density in (0.002, 0.02, 0.1, 0.6):
+        b = int(f(jnp.asarray(rng.random(s) < density)))
+        assert b >= prev, (density, b, prev)
+        prev = b
+    assert prev == len(ladder.specs)  # densest input -> dense fallback
+    assert any(r.fmt == "consensus" for r in stats.records())

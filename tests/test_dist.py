@@ -184,8 +184,9 @@ mesh = jax.make_mesh((4,), ("data",))
 s = 65536
 ladder = cc.BucketLadder.default(s)
 assert ladder.specs, "ladder must have sparse buckets at s=65536"
+from repro import compat
 def gathered(bits):
-    f = jax.shard_map(lambda b: cc.allgather_membership(b.reshape(-1), ("data",), ladder, 4),
+    f = compat.shard_map(lambda b: cc.allgather_membership(b.reshape(-1), ("data",), ladder, 4),
                   mesh=mesh, in_specs=P("data"), out_specs=P("data"), check_vma=False)
     return jax.jit(f)(bits)
 rng = np.random.default_rng(0)
@@ -244,8 +245,9 @@ from repro.compression import collectives as cc
 mesh = jax.make_mesh((4,), ("data",))
 s = 2048
 ladder = cc.BucketLadder.default(s)
+from repro import compat
 def gathered(bits):
-    f = jax.shard_map(lambda b: cc.allgather_membership(b.reshape(-1), ("data",), ladder, 4),
+    f = compat.shard_map(lambda b: cc.allgather_membership(b.reshape(-1), ("data",), ladder, 4),
                   mesh=mesh, in_specs=P("data"), out_specs=P("data"), check_vma=False)
     return jax.jit(f)(bits)
 rng = np.random.default_rng(0)

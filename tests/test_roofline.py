@@ -76,7 +76,8 @@ from repro.launch import roofline
 mesh = jax.make_mesh((4,), ("data",))
 def f(x):
     return jax.lax.psum(x * 2, "data")
-m = jax.shard_map(f, mesh=mesh, in_specs=P("data"), out_specs=P(), check_vma=False)
+from repro import compat
+m = compat.shard_map(f, mesh=mesh, in_specs=P("data"), out_specs=P(), check_vma=False)
 compiled = jax.jit(m).lower(jax.ShapeDtypeStruct((1024,), jnp.float32)).compile()
 stats = roofline.parse_collectives(compiled.as_text())
 assert stats.n_ops >= 1, compiled.as_text()[:500]
@@ -87,3 +88,37 @@ print("REAL HLO PARSE OK", stats.per_op)
                          capture_output=True, text=True, timeout=600)
     assert out.returncode == 0, out.stderr[-2000:]
     assert "REAL HLO PARSE OK" in out.stdout
+
+
+@pytest.mark.slow
+def test_comm_stats_match_hlo_all_modes():
+    """Acceptance: the CommStats ledger every collective reports through
+    agrees per op kind with the collective operand bytes parsed out of the
+    compiled HLO, for the raw / bitmap / auto wire plans (the auto row
+    ladder has sparse buckets at s=16384, so the lax.switch branches are
+    in the HLO and in the ledger)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    snippet = """
+import jax, jax.numpy as jnp
+from repro.comm import CommStats
+from repro.core import csr as csrmod, distributed_bfs as dbfs
+from repro.launch import roofline
+part = csrmod.Partition2D(n=1 << 16, n_orig=1 << 16, rows=2, cols=2)
+mesh = jax.make_mesh((2, 2), ("data", "model"))
+blk = jax.ShapeDtypeStruct((2, 2, 4096), jnp.int32)
+for mode in ("raw", "bitmap", "auto"):
+    stats = CommStats()
+    fn = dbfs.build_bfs(mesh, part, dbfs.DistBFSConfig(mode=mode), stats=stats)
+    compiled = jax.jit(fn).lower(blk, blk, jax.ShapeDtypeStruct((), jnp.int32)).compile()
+    cmp = roofline.compare_comm_stats(stats, compiled.as_text())
+    assert cmp.match, (mode, cmp.diff())
+    # every BFS exchange zone is in the ledger
+    assert set(cmp.per_phase) == {"bfs/column", "bfs/row", "bfs/transpose", "bfs/termination"}, cmp.per_phase
+print("COMM STATS MATCH OK")
+"""
+    out = subprocess.run([sys.executable, "-c", snippet], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "COMM STATS MATCH OK" in out.stdout
