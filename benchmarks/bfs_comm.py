@@ -1,10 +1,12 @@
 """Paper Tables 7.4/7.5: per-zone communication volume before/after
-compression, and modeled communication-time reduction.
+compression, and modeled communication-time reduction — now with a
+*policy* dimension (direction-optimizing traversal, paper §3.1).
 
 Replays a real multi-rank BFS level by level on the host (numpy),
 accumulating the exact bytes each zone would move under each wire format
-through :class:`repro.comm.CommStats` — the byte arithmetic lives in the
-wire formats (:mod:`repro.comm.formats`), not in this benchmark:
+AND each traversal policy through :class:`repro.comm.CommStats` — the byte
+arithmetic lives in the wire formats (:mod:`repro.comm.formats`), not in
+this benchmark:
 
   zones: vertexBroadcast / columnCommunication / rowCommunication /
          predecessorReduction  (the paper's instrumented regions, §4.2.1)
@@ -12,6 +14,12 @@ wire formats (:mod:`repro.comm.formats`), not in this benchmark:
   formats: raw 32-bit ids (Baseline), dense bitmap, bucketed PFOR16 packed
            (the in-graph static-shape codec), and the variable-length
            BP128+delta host codec (the paper's S4-BP128).
+
+  policies: top_down (push ALLTOALLV row phase), bottom_up (pull:
+            found-bitmap + bit-packed parents, plus the unreached-bitmap
+            all-gather folded into rowCommunication), direction_opt
+            (per-level switch on the shared density oracle — the same
+            alpha the device driver derives from the bucket ladder).
 
 Time reduction (Table 7.5 analog) uses the threshold-policy link model —
 compress+transmit+decompress at measured codec speeds vs plain transmit.
@@ -21,11 +29,12 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.comm import BitmapFormat, CommStats, DenseFormat, RawIdFormat
+from repro.comm import BitmapFormat, BitmapParentFormat, CommStats, DenseFormat, RawIdFormat
 from repro.comm.ladder import BucketLadder
 from repro.compression import codecs, threshold
 from repro.core import csr as csrmod
-from repro.core import validate
+from repro.core import traversal, validate
+from repro.core.distributed_bfs import parent_width_class
 from repro.graphgen import builder, kronecker
 
 ZONES = (
@@ -35,6 +44,7 @@ ZONES = (
     "predecessorReduction",
 )
 FORMATS = ("raw", "bitmap", "packed", "bp128d")
+POLICIES = traversal.POLICIES
 
 
 def _packed_wire_bytes(ladder: BucketLadder, ids: np.ndarray) -> int:
@@ -47,33 +57,59 @@ def _packed_wire_bytes(ladder: BucketLadder, ids: np.ndarray) -> int:
     return 4 * ladder.floor_words
 
 
-def simulate_zones(scale: int = 17, rows: int = 4, cols: int = 4, seed: int = 1):
-    """Host replay of the 2D BFS communication; returns a filled CommStats
-    whose phases are the paper's zones and fmts the four wire formats."""
+def build_replay_graph(scale: int, rows: int, cols: int, seed: int = 1):
+    """Graph + partition + reference levels, shared across policy replays
+    (the dominant cost — built once, not once per policy)."""
     g = builder.build_csr(kronecker.kronecker_edges(scale, seed=seed), n=1 << scale)
     bg = csrmod.partition_2d(g, rows=rows, cols=cols)
-    part = bg.part
-    s = part.chunk
-    wp = 16 if part.n_c <= (1 << 16) else 32
-    ladder = BucketLadder.default(s)  # column (membership vs 1-bit floor)
-    row_ladder = BucketLadder.default(s, floor_words=s, payload_width=wp)
     root = int(np.argmax(g.degrees()))
     level = validate.reference_bfs(g, root)
+    return g, bg.part, level
+
+
+def simulate_zones(
+    scale: int = 17, rows: int = 4, cols: int = 4, seed: int = 1,
+    policy: str = "top_down", prebuilt=None,
+):
+    """Host replay of the 2D BFS communication under one traversal policy.
+
+    Returns (stats, g, part, directions): a filled CommStats whose phases
+    are the paper's zones and fmts the four wire formats, plus the
+    per-level direction/byte log that makes the policy dimension visible
+    in BENCH_comm.json.  ``prebuilt`` (from :func:`build_replay_graph`)
+    skips the graph/reference rebuild."""
+    g, part, level = prebuilt or build_replay_graph(scale, rows, cols, seed)
+    s = part.chunk
+    wp = parent_width_class(part.n_c)
+    ladder = BucketLadder.default(s)  # column (membership vs 1-bit floor)
+    row_ladder = BucketLadder.default(s, floor_words=s, payload_width=wp)
+    # the SAME oracle the device driver uses: direction flips where the row
+    # ladder's sparse capacities run out
+    oracle = traversal.DensityOracle(part.n, alpha=traversal.ladder_alpha(s, wp))
 
     stats = CommStats()
     raw_col = RawIdFormat(s)
     bitmap = BitmapFormat(s)
     dense = DenseFormat(s)
+    bmp_parent = BitmapParentFormat(s, wp) if wp < 32 else None
     bp = codecs.BP128(delta=True)
     for fmt in FORMATS:  # root broadcast: 8 bytes to every rank, any format
         stats.add("vertexBroadcast", fmt, "all-gather", 8 * rows * cols)
     max_level = int(level.max())
     owner = np.minimum(np.arange(part.n) // s, rows * cols - 1)
 
+    use_bu = policy == "bottom_up"  # host mirror of the carry's use_bu flag
+    directions = []
     for lv in range(max_level):
         frontier = np.nonzero(level == lv)[0]
+        if policy == "top_down":
+            bu = False
+        elif policy == "bottom_up":
+            bu = True
+        else:
+            bu = use_bu
         # --- column phase: each owner rank all-gathers its chunk's frontier
-        # to the R-1 other ranks in its grid column
+        # to the R-1 other ranks in its grid column (direction-independent)
         for q in range(rows * cols):
             ids = frontier[owner[frontier] == q] - q * s
             n_recv = rows - 1
@@ -86,63 +122,114 @@ def simulate_zones(scale: int = 17, rows: int = 4, cols: int = 4, seed: int = 1)
             blob = bp.encode(ids.astype(np.uint32)) if ids.size else b""
             stats.add("columnCommunication", "bp128d", "all-gather",
                       len(blob) * n_recv)
-        # --- row phase: candidate (id, parent) subchunks to owners
+        # --- row phase: push exchanges candidate (id, parent) subchunks to
+        # owners; pull exchanges found-bitmap + packed parents and folds in
+        # the unreached-bitmap all-gather over the grid row.  The exchanged
+        # stream is the *candidate* set — every destination with a frontier
+        # neighbor, reached or not — which is what the device ladder
+        # buckets on (the new frontier alone badly underestimates dense
+        # levels, where most of the graph neighbors the frontier).
+        e_mask = level[g.src] == lv
+        cand = np.unique(g.dst[e_mask]) if e_mask.any() else np.empty(0, np.int64)
         nxt = np.nonzero(level == lv + 1)[0]
-        for q in range(rows * cols):
-            ids = nxt[owner[nxt] == q] - q * s
-            n_senders = cols - 1
-            stats.add("rowCommunication", "raw", "all-to-all",
-                      dense.wire_bytes * n_senders)  # dense int32 candidates
-            stats.add("rowCommunication", "bitmap", "all-to-all",
-                      dense.wire_bytes * n_senders)  # parents stay dense
-            stats.add("rowCommunication", "packed", "all-to-all",
-                      _packed_wire_bytes(row_ladder, ids) * n_senders)
-            blob = bp.encode(ids.astype(np.uint32)) if ids.size else b""
-            stats.add("rowCommunication", "bp128d", "all-to-all",
-                      (len(blob) + 2 * ids.size) * n_senders)
+        n_senders = cols - 1
+        row_bytes = {f: 0 for f in FORMATS}
+        if not bu:
+            for q in range(rows * cols):
+                ids = cand[owner[cand] == q] - q * s
+                row_bytes["raw"] += dense.wire_bytes * n_senders
+                row_bytes["bitmap"] += dense.wire_bytes * n_senders  # parents stay dense
+                row_bytes["packed"] += _packed_wire_bytes(row_ladder, ids) * n_senders
+                blob = bp.encode(ids.astype(np.uint32)) if ids.size else b""
+                row_bytes["bp128d"] += (len(blob) + 2 * ids.size) * n_senders
+        else:
+            # per-chunk cost is density-independent, so no per-rank split is
+            # needed: baseline stays uncompressed (dense candidates + raw-id
+            # unreached gather); compressed formats ride the pull wire
+            n_chunks = rows * cols
+            bu_wire = (bmp_parent.wire_bytes if bmp_parent else dense.wire_bytes)
+            row_bytes["raw"] = (dense.wire_bytes + raw_col.wire_bytes) * n_senders * n_chunks
+            for f in ("bitmap", "packed", "bp128d"):
+                row_bytes[f] = (bu_wire + bitmap.wire_bytes) * n_senders * n_chunks
+        for f in FORMATS:
+            stats.add("rowCommunication", f, "all-to-all", row_bytes[f])
+        directions.append(
+            {
+                "level": lv,
+                "direction": "bottom_up" if bu else "top_down",
+                "frontier": int(frontier.size),
+                "density": frontier.size / part.n,
+                "candidates": int(cand.size),
+                "row_bytes_packed": row_bytes["packed"],
+            }
+        )
+        # next level's direction from the new frontier's count — the same
+        # update the device driver threads through the carry
+        use_bu = bool(oracle.next_direction(np.int32(nxt.size), bool(use_bu)))
 
     # predecessor reduction: one dense pass at the end (uncompressed in the
     # paper too — its Table 7.4 shows 0% there)
     for fmt in FORMATS:
         stats.add("predecessorReduction", fmt, "all-gather", 4 * part.n)
-    return stats, g, part
+    return stats, g, part, directions
 
 
 def run(scale: int = 17, rows: int = 4, cols: int = 4):
-    stats, g, part = simulate_zones(scale, rows, cols)
-    zones = stats.per_phase_fmt()
+    """-> (table rows with a ``policy`` key, per-policy per-level log)."""
     pol = threshold.ThresholdPolicy()
     table = []
-    for zone in ZONES:
-        fmts = zones[zone]
-        raw = fmts["raw"]
-        for fmt in FORMATS:
-            b = fmts[fmt]
-            red = 100.0 * (1 - b / raw) if raw else 0.0
-            speedup = pol.modeled_speedup(max(raw / 4, 1), ratio=max(raw / max(b, 1), 1.0))
-            table.append(
-                {
-                    "zone": zone,
-                    "format": fmt,
-                    "bytes": b,
-                    "reduction_pct": red,
-                    "modeled_time_reduction_pct": 100.0 * (1 - 1 / speedup)
-                    if fmt != "raw"
-                    else 0.0,
-                }
-            )
-    return table
+    policy_levels = {}
+    prebuilt = build_replay_graph(scale, rows, cols)
+    for policy in POLICIES:
+        stats, g, part, directions = simulate_zones(
+            scale, rows, cols, policy=policy, prebuilt=prebuilt
+        )
+        policy_levels[policy] = directions
+        zones = stats.per_phase_fmt()
+        for zone in ZONES:
+            fmts = zones[zone]
+            raw = fmts["raw"]
+            for fmt in FORMATS:
+                b = fmts[fmt]
+                red = 100.0 * (1 - b / raw) if raw else 0.0
+                speedup = pol.modeled_speedup(
+                    max(raw / 4, 1), ratio=max(raw / max(b, 1), 1.0)
+                )
+                table.append(
+                    {
+                        "policy": policy,
+                        "zone": zone,
+                        "format": fmt,
+                        "bytes": b,
+                        "reduction_pct": red,
+                        "modeled_time_reduction_pct": 100.0 * (1 - 1 / speedup)
+                        if fmt != "raw"
+                        else 0.0,
+                    }
+                )
+    return table, policy_levels
 
 
 def print_table(table: list[dict]) -> None:
-    print("zone,format,bytes,data_reduction_pct,modeled_time_reduction_pct")
+    print("policy,zone,format,bytes,data_reduction_pct,modeled_time_reduction_pct")
     for r in table:
-        print(f"{r['zone']},{r['format']},{r['bytes']},{r['reduction_pct']:.2f},"
-              f"{r['modeled_time_reduction_pct']:.2f}")
+        print(f"{r['policy']},{r['zone']},{r['format']},{r['bytes']},"
+              f"{r['reduction_pct']:.2f},{r['modeled_time_reduction_pct']:.2f}")
+
+
+def print_levels(policy_levels: dict[str, list[dict]]) -> None:
+    print("# per-level direction + packed row bytes")
+    print("policy,level,direction,frontier,density,row_bytes_packed")
+    for policy, directions in policy_levels.items():
+        for d in directions:
+            print(f"{policy},{d['level']},{d['direction']},{d['frontier']},"
+                  f"{d['density']:.4f},{d['row_bytes_packed']}")
 
 
 def main() -> None:
-    print_table(run())
+    table, policy_levels = run()
+    print_table(table)
+    print_levels(policy_levels)
 
 
 if __name__ == "__main__":

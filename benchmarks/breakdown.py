@@ -58,6 +58,21 @@ def run(scale: int = 13, rows: int = 2, cols: int = 2):
 
     bench("localExpansion(SpMV)", spmv, f_col, src_l, dst_l)
 
+    # pull direction (bottom-up local expansion): only unreached
+    # destinations accumulate; probes go through the packed bitmaps
+    un = jnp.ones((part.n_r,), bool)
+
+    @jax.jit
+    def spmv_pull(f_col, un, src_l, dst_l):
+        act = (
+            f_col[jnp.clip(src_l, 0, part.n_c - 1)] & (src_l < part.n_c)
+            & un[jnp.clip(dst_l, 0, part.n_r - 1)] & (dst_l < part.n_r)
+        )
+        cand = jnp.where(act, src_l, np.iinfo(np.int32).max)
+        return jax.ops.segment_min(cand, dst_l, num_segments=part.n_r + 1)[: part.n_r]
+
+    bench("localExpansion(pull)", spmv_pull, f_col, un, src_l, dst_l)
+
     if spec is not None:
         pack = jax.jit(lambda i, c: cc.pack_id_stream(i, c, spec))
         words, meta = pack(ids, count)

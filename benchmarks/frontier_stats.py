@@ -2,7 +2,9 @@
 
 Reproduces the paper's analysis of extracted frontier buffers: distribution
 shape (uniform, slight skew), empirical entropy of ids and of gaps, and the
-per-level frontier density that drives the representation buckets.
+per-level frontier density that drives the representation buckets — plus
+the traversal direction the density oracle would pick for each level
+(paper §3.1: the same statistic drives wire choice AND push/pull choice).
 """
 
 from __future__ import annotations
@@ -10,6 +12,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core import bfs as bfsmod
+from repro.core import traversal
 from repro.graphgen import builder, kronecker, zipf
 
 
@@ -25,8 +28,11 @@ def run(scale: int = 14, seed: int = 1) -> dict:
     out = {"scale": scale, "n": g.n, "m": g.m, "levels": []}
     from repro.compression import codecs
 
+    oracle = traversal.DensityOracle(g.n)
+    use_bu = False
     for level in range(int(res.n_levels)):
         ids = np.nonzero(lv == level + 1)[0].astype(np.uint32)
+        use_bu = bool(oracle.next_direction(np.int32(ids.size), use_bu))
         if ids.size < 2:
             continue
         gaps = codecs.delta_encode(ids)
@@ -38,6 +44,7 @@ def run(scale: int = 14, seed: int = 1) -> dict:
                 "level": level + 1,
                 "count": int(ids.size),
                 "density": ids.size / g.n,
+                "direction": "bottom_up" if use_bu else "top_down",
                 "id_entropy_bits": zipf.empirical_entropy_bits(ids),
                 "gap_entropy_bits": zipf.empirical_entropy_bits(gaps),
                 "mean_gap": float(gaps[1:].mean()) if gaps.size > 1 else 0.0,
@@ -51,9 +58,9 @@ def run(scale: int = 14, seed: int = 1) -> dict:
 def main() -> None:
     r = run()
     print(f"# scale={r['scale']} n={r['n']} m={r['m']}")
-    print("level,count,density,id_H_bits,gap_H_bits,mean_gap,max_gap,skewness")
+    print("level,count,density,direction,id_H_bits,gap_H_bits,mean_gap,max_gap,skewness")
     for lv in r["levels"]:
-        print(f"{lv['level']},{lv['count']},{lv['density']:.4f},"
+        print(f"{lv['level']},{lv['count']},{lv['density']:.4f},{lv['direction']},"
               f"{lv['id_entropy_bits']:.2f},{lv['gap_entropy_bits']:.2f},"
               f"{lv['mean_gap']:.1f},{lv['max_gap']},{lv['skewness']:.4f}")
 

@@ -16,18 +16,27 @@ import time
 import traceback
 
 
-def write_bench_comm(path: str, full: bool, table: list[dict] | None = None) -> None:
+def write_bench_comm(
+    path: str,
+    full: bool,
+    table: list[dict] | None = None,
+    policy_levels: dict | None = None,
+) -> None:
     from benchmarks import bfs_comm
 
     scale, rows, cols = _bench_comm_size(full)
     if table is None:
-        table = bfs_comm.run(scale=scale, rows=rows, cols=cols)
+        table, policy_levels = bfs_comm.run(scale=scale, rows=rows, cols=cols)
     doc = {
         "benchmark": "bfs_comm",
         "scale": scale,
         "rows": rows,
         "cols": cols,
+        "policies": list(bfs_comm.POLICIES),
         "table": table,
+        # per-policy per-level direction + packed row bytes: makes the
+        # direction-opt vs top_down wire saving visible level by level
+        "policy_levels": policy_levels or {},
     }
     with open(path, "w") as f:
         json.dump(doc, f, indent=2)
@@ -52,13 +61,14 @@ def main() -> None:
 
     from benchmarks import bfs_comm, breakdown, codecs, frontier_stats, teps
 
-    bench_table: list[list[dict]] = []  # shared with write_bench_comm below
+    bench_table: list[tuple] = []  # shared with write_bench_comm below
 
     def bfs_comm_suite() -> None:
         scale, rows, cols = _bench_comm_size(args.full)
-        table = bfs_comm.run(scale=scale, rows=rows, cols=cols)
+        table, policy_levels = bfs_comm.run(scale=scale, rows=rows, cols=cols)
         bfs_comm.print_table(table)
-        bench_table.append(table)
+        bfs_comm.print_levels(policy_levels)
+        bench_table.append((table, policy_levels))
 
     suites = [
         ("codecs (Tables 5.4/5.5)", codecs.main),
@@ -89,7 +99,10 @@ def main() -> None:
     # must not be silently re-run here
     if "bench-json" not in args.skip and bench_table:
         try:
-            write_bench_comm(args.bench_json, args.full, table=bench_table[0])
+            table, policy_levels = bench_table[0]
+            write_bench_comm(
+                args.bench_json, args.full, table=table, policy_levels=policy_levels
+            )
         except Exception:  # noqa: BLE001
             failures.append("bench-json")
             traceback.print_exc()

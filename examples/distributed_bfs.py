@@ -14,6 +14,9 @@ import time
 ap = argparse.ArgumentParser()
 ap.add_argument("--grid", default="2x2")
 ap.add_argument("--scale", type=int, default=12)
+ap.add_argument("--policy", default="top_down",
+                choices=["top_down", "bottom_up", "direction_opt"],
+                help="traversal direction policy (paper §3.1)")
 args = ap.parse_args()
 ROWS, COLS = (int(x) for x in args.grid.split("x"))
 os.environ.setdefault(
@@ -40,7 +43,7 @@ def main() -> None:
 
     ref = validate.reference_bfs(g, root)
     for mode in ("raw", "bitmap", "auto"):
-        cfg = dbfs.DistBFSConfig(mode=mode)
+        cfg = dbfs.DistBFSConfig(mode=mode, policy=args.policy)
         fn = dbfs.build_bfs(mesh, bg, cfg)
         src_l, dst_l = dbfs.shard_blocked(mesh, bg, cfg)
         parent, level, depth = fn(src_l, dst_l, jnp.int32(root))
@@ -51,8 +54,8 @@ def main() -> None:
         dt = time.perf_counter() - t0
         ok = np.array_equal(np.asarray(level)[: g.n], ref)
         v = validate.validate_bfs_tree(g, np.asarray(parent)[: g.n], root)
-        print(f"  mode={mode:7s} depth={int(depth):2d} time={dt:.3f}s "
-              f"levels_match={ok} graph500_valid={v.ok}")
+        print(f"  mode={mode:7s} policy={args.policy:13s} depth={int(depth):2d} "
+              f"time={dt:.3f}s levels_match={ok} graph500_valid={v.ok}")
 
 
 if __name__ == "__main__":

@@ -25,8 +25,12 @@ def main() -> None:
     print(f"n={g.n} padded={bg.part.n} m_sym={g.m} e_cap={bg.e_cap} s={bg.part.chunk}")
 
     ref_levels = validate.reference_bfs(g, root=0)
-    for mode in ("raw", "bitmap", "auto"):
-        cfg = dbfs.DistBFSConfig(mode=mode)
+    # wire modes (top_down) plus every traversal policy on the adaptive
+    # plan; the low alpha forces direction_opt through its pull branch
+    combos = [(m, "top_down", None) for m in ("raw", "bitmap", "auto")]
+    combos += [("auto", p, 0.01) for p in ("bottom_up", "direction_opt")]
+    for mode, policy, alpha in combos:
+        cfg = dbfs.DistBFSConfig(mode=mode, policy=policy, alpha=alpha)
         fn = dbfs.build_bfs(mesh, bg, cfg)
         src_l, dst_l = dbfs.shard_blocked(mesh, bg, cfg)
         parent, level, depth = fn(src_l, dst_l, jnp.int32(0))
@@ -34,11 +38,13 @@ def main() -> None:
         level = np.asarray(level)[: g.n]
         assert np.array_equal(level, ref_levels), (
             mode,
+            policy,
             np.nonzero(level != ref_levels)[0][:10],
         )
         res = validate.validate_bfs_tree(g, parent, root=0, level=level)
-        assert res.ok, (mode, res.failures)
-        print(f"mode={mode:7s} OK depth={int(depth)} reached={res.n_reached}")
+        assert res.ok, (mode, policy, res.failures)
+        print(f"mode={mode:7s} policy={policy:13s} OK "
+              f"depth={int(depth)} reached={res.n_reached}")
     print("DIST BFS ALL MODES OK")
 
 

@@ -28,6 +28,7 @@ from repro.comm.engine import AdaptiveExchange  # noqa: F401
 from repro.comm.formats import (  # noqa: F401
     INF,
     BitmapFormat,
+    BitmapParentFormat,
     DenseFormat,
     IdStreamFormat,
     IdStreamSpec,
@@ -44,6 +45,7 @@ from repro.comm.stats import CommStats, ExchangeRecord  # noqa: F401
 from repro.comm.collectives import (  # noqa: F401
     allgather_membership,
     allreduce_int8,
+    alltoall_bitmap_min,
     alltoall_min_candidates,
 )
 from repro.comm import registry  # noqa: F401

@@ -4,8 +4,11 @@ Paper Alg. 4 on the accelerator: the column phase (ALLGATHERV + compress)
 and the row phase (ALLTOALLV + compress) both dispatch through
 :class:`repro.comm.engine.AdaptiveExchange`; the representation on the
 wire is one of the :mod:`repro.comm.formats` chosen per communicator group
-by the bucket ladder.  The int8 gradient all-reduce (beyond-paper) is the
-degenerate single-format case of the same engine.
+by the bucket ladder.  The bottom-up (pull) traversal direction swaps the
+row id-stream ALLTOALLV for :func:`alltoall_bitmap_min` — a found-bitmap +
+bit-packed-parent exchange whose cost is density-independent.  The int8
+gradient all-reduce (beyond-paper) is the degenerate single-format case of
+the same engine.
 
 Every collective reports its bytes through :class:`repro.comm.stats.CommStats`.
 """
@@ -19,6 +22,7 @@ from repro.comm.engine import AdaptiveExchange
 from repro.comm.formats import (
     INF,
     BitmapFormat,
+    BitmapParentFormat,
     DenseFormat,
     IdStreamFormat,
     Int8Format,
@@ -181,6 +185,28 @@ def alltoall_min_candidates(
         lambda _: alltoall_dense_min(ex, prop)
     ]
     return ex.dispatch(my_bucket, branches)
+
+
+def alltoall_bitmap_min(
+    ex: AdaptiveExchange, prop: jax.Array, fmt: BitmapParentFormat, n_c: int
+) -> jax.Array:
+    """Bottom-up row exchange: found-bitmap + bit-packed local parents.
+
+    ``prop``: (group_size, s) int32 — *column-local* candidate parents per
+    destination owner chunk (INF = no frontier neighbor found).  Each
+    sender's subchunk travels as ``s/32`` found bits plus ``payload_width``
+    bits per position; the receiver rebuilds global parent ids from the
+    sender's grid-column index and min-reduces, reproducing exactly the
+    winner the push direction's ``segment_min`` would pick.
+    """
+    c, s = prop.shape
+    assert s == fmt.s, (s, fmt.s)
+    words = jax.vmap(fmt.pack)(prop)  # (c, data_words)
+    recv = ex.all_to_all(words, fmt=fmt.name).reshape(c, fmt.data_words)
+    bits, local = jax.vmap(fmt.unpack)(recv)  # (c, s) each
+    sender = jnp.arange(c, dtype=jnp.int32)[:, None]  # grid-column of origin
+    glob = jnp.where(bits, sender * n_c + local, INF)
+    return jnp.min(glob, axis=0).astype(jnp.int32)
 
 
 # ---------------------------------------------------------------------------

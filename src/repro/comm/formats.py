@@ -16,6 +16,8 @@ time and packing/unpacking payloads losslessly:
   paper's Baseline).
 * :class:`DenseFormat` — uncompressed dense value vector (row-phase
   fallback).
+* :class:`BitmapParentFormat` — found-bitmap + bit-packed parent payload,
+  the bottom-up (pull) row exchange of the direction-optimized traversal.
 * :class:`Int8Format` — block-quantized int8 payload + f32 scales per 128
   values (beyond-paper: gradient/feature wire format).
 
@@ -220,6 +222,62 @@ class IdStreamFormat:
                 jnp.int32
             )
         return ids, count, payload
+
+
+@dataclasses.dataclass(frozen=True)
+class BitmapParentFormat:
+    """Found-bitmap + dense bit-packed parent payload (bottom-up row phase).
+
+    The pull direction needs no id stream: every position of an owned chunk
+    is described by one *found* bit (a frontier neighbor exists) plus a
+    ``payload_width``-bit column-local parent id riding in the same word
+    vector.  Wire cost is ``s/32 + s*payload_width/32`` words per chunk —
+    cheaper than the 32-bit dense candidate vector whenever
+    ``payload_width < 32``, independent of frontier density (which is the
+    point: bottom-up runs at the dense levels where id streams stop
+    paying).  The receiver rebuilds global parents as
+    ``sender_col * n_c + local`` and min-reduces, which preserves the
+    push direction's min-candidate winner exactly.
+    """
+
+    s: int
+    payload_width: int
+
+    def __post_init__(self):
+        assert self.s % bpref.CHUNK == 0, self.s
+        assert self.payload_width in bpref.B_CLASSES and self.payload_width < 32, (
+            self.payload_width
+        )
+
+    @property
+    def name(self) -> str:
+        return f"bitmap+p{self.payload_width}"
+
+    @property
+    def data_words(self) -> int:
+        return self.s // 32 + self.s * self.payload_width // 32
+
+    @property
+    def meta_words(self) -> int:
+        return 0
+
+    @property
+    def wire_bytes(self) -> int:
+        return 4 * self.data_words
+
+    def pack(self, prop: jax.Array) -> jax.Array:
+        """(s,) int32 column-local candidates (INF = none) -> wire words."""
+        bits = prop < INF
+        payload = jnp.where(bits, prop, 0).astype(jnp.uint32)
+        return jnp.concatenate(
+            [pack_bitmap(bits), bp.pack(payload, self.payload_width)]
+        )
+
+    def unpack(self, words: jax.Array) -> tuple[jax.Array, jax.Array]:
+        """-> (found (s,) bool, local parent (s,) int32)."""
+        bits = unpack_bitmap(words[: self.s // 32])
+        local = bp.unpack(words[self.s // 32 :], self.payload_width).astype(jnp.int32)
+        return bits, local
 
 
 @dataclasses.dataclass(frozen=True)

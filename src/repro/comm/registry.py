@@ -8,6 +8,12 @@ column/row collectives for the distributed BFS.  New exchange patterns
 (butterfly, hierarchical) plug in as additional wire plans rather than a
 hand-rolled fourth collective.
 
+**Traversal policies** (direction optimization, paper §3.1) are the third
+registry axis: ``top_down`` / ``bottom_up`` / ``direction_opt``, defined in
+:mod:`repro.core.traversal` and resolved here by name, so a distributed BFS
+configuration is a *policy x wire-plan* point and new exchange patterns
+(butterfly) slot in as combinations rather than bespoke drivers.
+
 Host codecs (variable-length, numpy — benchmarks and the host Graph500
 driver) and wire plans (static-shape, in-graph) live in the same module so
 there is exactly one place a representation can be registered.
@@ -16,10 +22,14 @@ there is exactly one place a representation can be registered.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
 
 from repro.comm import collectives as cc
 from repro.comm.engine import AdaptiveExchange
+from repro.comm.formats import INF, BitmapParentFormat
 from repro.comm.ladder import BucketLadder
 from repro.compression import codecs
 
@@ -72,11 +82,21 @@ class WirePlan:
     ``fn(bits (s,) bool) -> (group_size*s,) bool``; ``build_row(s, axis,
     group_size, parent_width, *, policy, stats, phase)`` returns
     ``fn(prop (group_size, s) i32) -> (s,) i32`` (min over senders).
+
+    The bottom-up (pull) traversal direction adds two more exchange shapes:
+    ``build_row_bu(s, axis, group_size, n_c, parent_width, ...)`` returns
+    ``fn(prop (group_size, s) i32 column-LOCAL candidates) -> (s,) i32``
+    (global parents, min over senders), and ``build_unreached(s, axis,
+    group_size, ...)`` returns ``fn(bits (s,) bool) -> (group_size*s,)
+    bool`` — the unreached-membership all-gather over the grid row that
+    replaces the candidate id streams at dense levels.
     """
 
     name: str
     build_column: Callable
     build_row: Callable
+    build_row_bu: Callable
+    build_unreached: Callable
 
 
 _WIRE_PLANS: dict[str, WirePlan] = {}
@@ -138,6 +158,90 @@ def _auto_row(
     )
 
 
-register_wire_plan(WirePlan("raw", _raw_column, _dense_row))
-register_wire_plan(WirePlan("bitmap", _bitmap_column, _dense_row))
-register_wire_plan(WirePlan("auto", _auto_column, _auto_row))
+def _dense_row_bu(
+    s, axis, group_size, n_c, parent_width, *, policy=None, stats=None,
+    phase="bfs/row-pull",
+):
+    """Baseline pull row exchange: globalize candidates, dense int32 wire."""
+    ex = AdaptiveExchange(phase, axis, group_size, None, stats)
+
+    def run(prop):
+        j = jax.lax.axis_index(axis)
+        glob = jnp.where(prop < INF, j * n_c + prop, INF)
+        return cc.alltoall_dense_min(ex, glob)
+
+    return run
+
+
+def _bitmap_row_bu(
+    s, axis, group_size, n_c, parent_width, *, policy=None, stats=None,
+    phase="bfs/row-pull",
+):
+    """Compressed pull row exchange: found-bitmap + bit-packed parents."""
+    if parent_width >= 32:  # payload would not undercut the dense vector
+        return _dense_row_bu(
+            s, axis, group_size, n_c, parent_width,
+            policy=policy, stats=stats, phase=phase,
+        )
+    fmt = BitmapParentFormat(s, parent_width)
+    ex = AdaptiveExchange(phase, axis, group_size, None, stats)
+    return lambda prop: cc.alltoall_bitmap_min(ex, prop, fmt, n_c)
+
+
+def _raw_unreached(s, axis, group_size, *, policy=None, stats=None,
+                   phase="bfs/unreached"):
+    ex = AdaptiveExchange(phase, axis, group_size, None, stats)
+    return lambda bits: cc.gather_raw_ids(ex, bits)
+
+
+def _bitmap_unreached(s, axis, group_size, *, policy=None, stats=None,
+                      phase="bfs/unreached"):
+    ex = AdaptiveExchange(phase, axis, group_size, None, stats)
+    return lambda bits: cc.gather_bitmap(ex, bits)
+
+
+register_wire_plan(
+    WirePlan("raw", _raw_column, _dense_row, _dense_row_bu, _raw_unreached)
+)
+register_wire_plan(
+    WirePlan("bitmap", _bitmap_column, _dense_row, _bitmap_row_bu, _bitmap_unreached)
+)
+register_wire_plan(
+    WirePlan("auto", _auto_column, _auto_row, _bitmap_row_bu, _bitmap_unreached)
+)
+
+
+# ---------------------------------------------------------------------------
+# traversal policies (direction optimization, paper §3.1)
+# ---------------------------------------------------------------------------
+
+_TRAVERSALS: dict[str, Any] = {}
+
+
+def register_traversal(policy: Any) -> None:
+    """Register a traversal policy object (must expose ``.name``)."""
+    if policy.name in _TRAVERSALS:
+        raise ValueError(f"traversal policy {policy.name!r} already registered")
+    _TRAVERSALS[policy.name] = policy
+
+
+def _ensure_builtin_traversals() -> None:
+    if not _TRAVERSALS:
+        # registers top_down / bottom_up / direction_opt on import
+        import repro.core.traversal  # noqa: F401
+
+
+def traversal(name: str) -> Any:
+    """Resolve a traversal policy by name (lazy-imports the built-ins)."""
+    _ensure_builtin_traversals()
+    try:
+        return _TRAVERSALS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown traversal policy {name!r}; known: {sorted(_TRAVERSALS)}"
+        ) from None
+
+
+def available_traversals() -> list[str]:
+    _ensure_builtin_traversals()
+    return sorted(_TRAVERSALS)

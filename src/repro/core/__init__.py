@@ -1,9 +1,14 @@
 """The paper's primary contribution: compressed-communication distributed BFS.
 
 * :mod:`repro.core.csr` — device-side graph containers + 2D block partitioner.
+* :mod:`repro.core.traversal` — direction-optimizing traversal policies
+  (top_down / bottom_up / direction_opt, paper §3.1) + the popcount
+  density oracle; both BFS drivers dispatch their level loops through a
+  policy resolved from :mod:`repro.comm.registry`.
 * :mod:`repro.core.bfs` — single-device level-synchronous BFS
   (``jax.lax.while_loop``; edge-centric SpMV formulation, paper Alg. 2).
 * :mod:`repro.core.distributed_bfs` — 2D-partitioned BFS over ``shard_map``
-  with compressed column/row collectives (paper Alg. 4).
+  with compressed column/row collectives (paper Alg. 4), policy x wire-plan
+  configurable.
 * :mod:`repro.core.validate` — Graph500 5-rule BFS-tree validator.
 """

@@ -6,12 +6,15 @@ the paper itself uses (``t = A (x) f`` over a min-parent semiring), with the
 GPU warp-queue mechanics replaced by fully-vectorizable segment reductions
 (DESIGN.md §3, hardware adaptation).
 
-Direction optimization (Beamer, paper §3.1): in the vectorized formulation
-both directions touch all edges, so the *work* saving of bottom-up does not
-apply; what survives on TPU is the *representation* switch (dense bitmap vs
-sparse id list) which drives the compressed-exchange bucket choice in the
-distributed version.  ``bfs_levels`` therefore tracks frontier density per
-level and reports which representation each level would use.
+Direction optimization (Beamer, paper §3.1) is a *policy*, resolved through
+:mod:`repro.core.traversal`: ``top_down`` pushes from the frontier,
+``bottom_up`` pulls through the packed frontier bitmap into unreached
+vertices, and ``direction_opt`` switches per level on the popcount density
+oracle.  In the vectorized formulation both directions touch all edges, so
+the *work* saving of bottom-up does not apply; what survives on TPU is the
+*representation* switch (dense bitmap vs sparse id list) which drives the
+compressed-exchange bucket choice in the distributed version.  All policies
+return identical parent/level arrays.
 """
 
 from __future__ import annotations
@@ -21,6 +24,8 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.core import traversal
 
 INF = jnp.iinfo(jnp.int32).max
 
@@ -37,82 +42,63 @@ class _State(NamedTuple):
     frontier: jax.Array  # (n,) bool
     depth: jax.Array
     active: jax.Array  # scalar bool
+    use_bu: jax.Array  # scalar bool: next level expands bottom-up
 
 
-@functools.partial(jax.jit, static_argnames=("n",))
-def bfs(src: jax.Array, dst: jax.Array, root: jax.Array, n: int) -> BFSResult:
+def _init_state(root: jax.Array, n: int, policy: traversal.TraversalPolicy) -> _State:
+    return _State(
+        parent=jnp.full((n,), -1, jnp.int32).at[root].set(root.astype(jnp.int32)),
+        level=jnp.full((n,), -1, jnp.int32).at[root].set(0),
+        frontier=jnp.zeros((n,), bool).at[root].set(True),
+        depth=jnp.int32(0),
+        active=jnp.bool_(True),
+        use_bu=jnp.bool_(policy.starts_bottom_up),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("n", "policy"))
+def bfs(
+    src: jax.Array, dst: jax.Array, root: jax.Array, n: int, policy: str = "top_down"
+) -> BFSResult:
     """BFS over a symmetric COO edge list (padding edges may use src=dst=n).
 
     Args:
       src/dst: (m,) int32 edge endpoints; entries equal to ``n`` are padding.
       root: scalar int32 source vertex.
       n: vertex count (static).
+      policy: traversal policy name (see :mod:`repro.core.traversal`).
     """
-    m = src.shape[0]
-    del m
-
-    def level_step(state: _State) -> _State:
-        # t = A (x) f over the (min, parent-id) semiring: for every edge
-        # (u, v) with u in frontier, propose parent u for v.
-        cand = jnp.where(state.frontier[jnp.minimum(src, n - 1)] & (src < n), src, INF)
-        proposed = jax.ops.segment_min(cand, dst, num_segments=n + 1)[:n]
-        new = (proposed < INF) & (state.parent < 0)
-        parent = jnp.where(new, proposed, state.parent)
-        level = jnp.where(new, state.depth + 1, state.level)
-        return _State(
-            parent=parent,
-            level=level,
-            frontier=new,
-            depth=state.depth + 1,
-            active=jnp.any(new),
-        )
-
-    init = _State(
-        parent=jnp.full((n,), -1, jnp.int32).at[root].set(root.astype(jnp.int32)),
-        level=jnp.full((n,), -1, jnp.int32).at[root].set(0),
-        frontier=jnp.zeros((n,), bool).at[root].set(True),
-        depth=jnp.int32(0),
-        active=jnp.bool_(True),
+    pol = traversal.resolve(policy)
+    oracle = traversal.DensityOracle(n)
+    out = jax.lax.while_loop(
+        lambda s: s.active,
+        lambda s: traversal.level_once(src, dst, n, pol, oracle, s),
+        _init_state(root, n, pol),
     )
-    out = jax.lax.while_loop(lambda s: s.active, level_step, init)
     return BFSResult(parent=out.parent, level=out.level, n_levels=out.depth)
 
 
-@functools.partial(jax.jit, static_argnames=("n", "max_levels"))
+@functools.partial(jax.jit, static_argnames=("n", "max_levels", "policy"))
 def bfs_levels(
-    src: jax.Array, dst: jax.Array, root: jax.Array, n: int, max_levels: int = 64
+    src: jax.Array,
+    dst: jax.Array,
+    root: jax.Array,
+    n: int,
+    max_levels: int = 64,
+    policy: str = "top_down",
 ) -> tuple[BFSResult, jax.Array]:
     """BFS + per-level frontier sizes (drives representation choice stats)."""
+    pol = traversal.resolve(policy)
+    oracle = traversal.DensityOracle(n)
 
-    def body(carry, _):
-        state = carry
+    def body(state, _):
         state = jax.lax.cond(
             state.active,
-            lambda s: _level_once(src, dst, n, s),
+            lambda s: traversal.level_once(src, dst, n, pol, oracle, s),
             lambda s: s._replace(active=jnp.bool_(False)),
             state,
         )
         return state, jnp.sum(state.frontier.astype(jnp.int32))
 
-    init = _State(
-        parent=jnp.full((n,), -1, jnp.int32).at[root].set(root.astype(jnp.int32)),
-        level=jnp.full((n,), -1, jnp.int32).at[root].set(0),
-        frontier=jnp.zeros((n,), bool).at[root].set(True),
-        depth=jnp.int32(0),
-        active=jnp.bool_(True),
-    )
-    out, sizes = jax.lax.scan(body, init, None, length=max_levels)
+    out, sizes = jax.lax.scan(body, _init_state(root, n, pol), None, length=max_levels)
     return BFSResult(parent=out.parent, level=out.level, n_levels=out.depth), sizes
-
-
-def _level_once(src, dst, n, state: _State) -> _State:
-    cand = jnp.where(state.frontier[jnp.minimum(src, n - 1)] & (src < n), src, INF)
-    proposed = jax.ops.segment_min(cand, dst, num_segments=n + 1)[:n]
-    new = (proposed < INF) & (state.parent < 0)
-    return _State(
-        parent=jnp.where(new, proposed, state.parent),
-        level=jnp.where(new, state.depth + 1, state.level),
-        frontier=new,
-        depth=state.depth + 1,
-        active=jnp.any(new),
-    )

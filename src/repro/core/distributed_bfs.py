@@ -10,21 +10,27 @@ chunk q = i*C + j of width s):
      membership over the row axis assembles the column slice f_j; the wire
      representation is chosen per group by the bucket ladder — packed
      delta+PFOR16 id stream when sparse, width-1 bitmap when dense.
-  3. **local SpMV**: masked segment_min of candidate parents over the
-     block's edges (t_i = A_ij (x) f_j over the min-parent semiring).
-  4. **row phase** (ALLTOALLV + compress): per-destination candidate
-     subchunks exchanged over the column axis, ids packed as in (2),
-     parent payloads bit-packed at the static column-width class; receiver
-     min-reduces into its owned chunk.
-  5. frontier/parent/level update, global ``psum`` termination test.
+  3. **local expansion**: the traversal policy's direction — *push*
+     (top-down: masked segment_min of candidate parents over the block's
+     edges, t_i = A_ij (x) f_j) or *pull* (bottom-up: only unreached
+     destinations accumulate, gated on an unreached-bitmap all-gather over
+     the grid row).
+  4. **row phase**: top-down exchanges per-destination candidate subchunks
+     (ALLTOALLV + compress — ids delta-packed, parent payloads bit-packed);
+     bottom-up swaps the id streams for a found-bitmap + bit-packed-parent
+     exchange whose wire cost is density-independent.  Receiver min-reduces
+     into its owned chunk either way.
+  5. frontier/parent/level update, global ``psum`` termination test; for
+     ``direction_opt`` the same popcount count drives the next level's
+     direction through the carry.
 
-Modes are *wire plans* resolved through :mod:`repro.comm.registry`:
-'raw' (uncompressed id lists — the paper's Baseline), 'bitmap' (dense
-1-bit membership), 'auto' (bucketed adaptive — the paper's compression +
-adaptive-representation stack).  Every collective — including the
-transpose permute and the termination psum — reports its wire bytes
-through :class:`repro.comm.CommStats`, so the accounting can be checked
-1:1 against the collective operand sizes in the lowered HLO
+Modes are *wire plans* and traversal directions are *policies*, both
+resolved through :mod:`repro.comm.registry`: mode 'raw' (uncompressed — the
+paper's Baseline), 'bitmap', 'auto' (bucketed adaptive) x policy 'top_down',
+'bottom_up', 'direction_opt' (Beamer per-level switch).  Every collective —
+including the transpose permute and the termination psum — reports its wire
+bytes through :class:`repro.comm.CommStats`, so the accounting can be
+checked 1:1 against the collective operand sizes in the lowered HLO
 (:func:`repro.launch.roofline.compare_comm_stats`).
 """
 
@@ -42,6 +48,7 @@ from jax.sharding import PartitionSpec as P
 from repro import compat
 from repro.comm import AdaptiveExchange, CommStats, ThresholdPolicy
 from repro.comm import registry as wire_registry
+from repro.core import traversal
 from repro.core.csr import BlockedGraph, Partition2D
 from repro.kernels.bitpack.ref import B_CLASSES
 
@@ -53,6 +60,9 @@ class DistBFSConfig:
     row_axes: tuple[str, ...] = ("data",)  # mesh axes spanning grid rows (R)
     col_axis: str = "model"  # mesh axis spanning grid columns (C)
     mode: str = "auto"  # wire-plan name: 'raw' | 'bitmap' | 'auto'
+    policy: str = "top_down"  # traversal: 'top_down' | 'bottom_up' | 'direction_opt'
+    alpha: float | None = None  # BU entry density; None = derive from the ladder
+    beta: float = 0.05  # BU exit density (hysteresis)
     max_levels: int = 64
 
     @property
@@ -75,6 +85,7 @@ class _Carry(NamedTuple):
     frontier: jax.Array  # (s,) bool
     depth: jax.Array
     active: jax.Array
+    use_bu: jax.Array  # scalar bool: next level expands bottom-up
 
 
 def _bfs_local(
@@ -85,7 +96,7 @@ def _bfs_local(
     part: Partition2D,
     cfg: DistBFSConfig,
     stats: CommStats | None = None,
-    policy: ThresholdPolicy | None = None,
+    threshold: ThresholdPolicy | None = None,
 ):
     """Per-rank body (inside shard_map). src_l/dst_l: (1,..,1,e_cap)."""
     src_l = src_l.reshape(-1)
@@ -99,18 +110,51 @@ def _bfs_local(
     p_width = parent_width_class(n_c)
     perm = part.transpose_perm()
 
+    policy = traversal.resolve(cfg.policy)
+    alpha = cfg.alpha
+    if alpha is None:
+        # direction switch at the row ladder's sparse-capacity edge: one
+        # oracle decides both the wire bucket and the traversal direction
+        alpha = traversal.ladder_alpha(s, p_width, threshold=threshold)
+    oracle = traversal.DensityOracle(part.n, alpha=alpha, beta=cfg.beta)
+
     # mode selection through the unified wire-plan registry: the plan builds
-    # both adaptive exchanges (ladders, formats, engine, stats) for this site
+    # the adaptive exchanges (ladders, formats, engine, stats) each traversal
+    # direction needs at this site; unused directions build nothing, so no
+    # dead collectives reach the HLO or the CommStats ledger
     plan = wire_registry.wire_plan(cfg.mode)
     column_gather = plan.build_column(
-        s, cfg.row_axes, r, policy=policy, stats=stats, phase="bfs/column"
+        s, cfg.row_axes, r, policy=threshold, stats=stats, phase="bfs/column"
     )
-    row_exchange = plan.build_row(
-        s, cfg.col_axis, c, p_width, policy=policy, stats=stats, phase="bfs/row"
-    )
+    row_exchange = row_exchange_bu = unreached_gather = None
+    if policy.uses_top_down:
+        row_exchange = plan.build_row(
+            s, cfg.col_axis, c, p_width, policy=threshold, stats=stats, phase="bfs/row"
+        )
+    if policy.uses_bottom_up:
+        row_exchange_bu = plan.build_row_bu(
+            s, cfg.col_axis, c, n_c, p_width,
+            policy=threshold, stats=stats, phase="bfs/row-pull",
+        )
+        unreached_gather = plan.build_unreached(
+            s, cfg.col_axis, c, policy=threshold, stats=stats, phase="bfs/unreached"
+        )
     # non-adaptive exchanges report through the same engine facade
     ex_transpose = AdaptiveExchange("bfs/transpose", cfg.all_axes, r * c, None, stats)
     ex_term = AdaptiveExchange("bfs/termination", cfg.all_axes, r * c, None, stats)
+
+    ctx = traversal.DistLevelCtx(
+        src_l=src_l,
+        dst_l=dst_l,
+        n_r=n_r,
+        n_c=n_c,
+        s=s,
+        c=c,
+        col_index=j,
+        row_exchange=row_exchange,
+        row_exchange_bu=row_exchange_bu,
+        unreached_gather=unreached_gather,
+    )
 
     idx_global = base + jnp.arange(s, dtype=jnp.int32)
     root32 = root.astype(jnp.int32)
@@ -120,21 +164,19 @@ def _bfs_local(
         bits_t = ex_transpose.ppermute(carry.frontier, perm, fmt="membership")
         # 2. column phase: assemble f_j (n_c,) membership
         f_col = column_gather(bits_t)
-        # 3. local SpMV over block edges
-        active_e = f_col[jnp.clip(src_l, 0, n_c - 1)] & (src_l < n_c)
-        cand = jnp.where(active_e, j * n_c + src_l, INF)
-        prop = jax.ops.segment_min(cand, dst_l, num_segments=n_r + 1)[:n_r]
-        # 4. row phase: exchange per-destination subchunks, min-reduce
-        reduced = row_exchange(prop.reshape(c, s))
-        # 5. update owned state
+        # 3+4. policy-directed local expansion + row exchange
+        reduced = policy.expand_dist(ctx, carry.parent, f_col, carry.use_bu)
+        # 5. update owned state; the popcount count feeds both the
+        # termination test and (for direction_opt) the next direction
         new = (reduced < INF) & (carry.parent < 0)
-        n_new = ex_term.psum(jnp.sum(new.astype(jnp.int32)), fmt="termination")
+        n_new = ex_term.psum(oracle.local_count(new), fmt="termination")
         return _Carry(
             parent=jnp.where(new, reduced, carry.parent),
             level=jnp.where(new, carry.depth + 1, carry.level),
             frontier=new,
             depth=carry.depth + 1,
             active=(n_new > 0) & (carry.depth + 1 < cfg.max_levels),
+            use_bu=policy.next_direction(oracle, n_new, carry.use_bu),
         )
 
     init = _Carry(
@@ -143,6 +185,7 @@ def _bfs_local(
         frontier=idx_global == root32,
         depth=jnp.int32(0),
         active=jnp.bool_(True),
+        use_bu=jnp.bool_(policy.starts_bottom_up),
     )
     out = jax.lax.while_loop(lambda s_: s_.active, level_step, init)
     return out.parent, out.level, out.depth
@@ -154,7 +197,7 @@ def build_bfs(
     cfg: DistBFSConfig | None = None,
     *,
     stats: CommStats | None = None,
-    policy: ThresholdPolicy | None = None,
+    threshold: ThresholdPolicy | None = None,
 ):
     """Compile the distributed BFS for a mesh. Returns fn(src_l, dst_l, root)
     -> (parent (n,), level (n,), n_levels) with outputs sharded over all axes.
@@ -162,28 +205,29 @@ def build_bfs(
     ``bg`` may be a BlockedGraph (runnable) or a bare Partition2D (dry-run
     lowering against ShapeDtypeStructs).  ``stats``, if given, is filled at
     trace time with one entry per collective op the program emits (idempotent
-    across retraces).  ``policy`` tunes the bucket ladders' break-even
+    across retraces).  ``threshold`` tunes the bucket ladders' break-even
     pruning (default: the TPU-link ThresholdPolicy)."""
     cfg = cfg or DistBFSConfig(
         row_axes=tuple(mesh.axis_names[:-1]), col_axis=mesh.axis_names[-1]
     )
     wire_registry.wire_plan(cfg.mode)  # fail on unknown modes at build time
+    policy = wire_registry.traversal(cfg.policy)  # ... and unknown policies
     part = bg if isinstance(bg, Partition2D) else bg.part
     assert part.rows == functools.reduce(
         lambda a, b: a * b, (mesh.shape[a] for a in cfg.row_axes)
     ), "grid rows must match row-axis product"
     assert part.cols == mesh.shape[cfg.col_axis]
-    if cfg.mode in ("bitmap", "auto"):
+    if cfg.mode in ("bitmap", "auto") or policy.uses_bottom_up:
         assert part.chunk % 1024 == 0, (
-            f"compressed modes need 1024-multiple chunks (got s={part.chunk}); "
-            "partition with chunk_multiple=1024"
+            f"compressed modes and pull traversal need 1024-multiple chunks "
+            f"(got s={part.chunk}); partition with chunk_multiple=1024"
         )
 
     blk_spec = P(*cfg.row_axes, cfg.col_axis, None)
     out_spec = P(cfg.all_axes)
 
     local = functools.partial(
-        _bfs_local, part=part, cfg=cfg, stats=stats, policy=policy
+        _bfs_local, part=part, cfg=cfg, stats=stats, threshold=threshold
     )
     mapped = compat.shard_map(
         local,

@@ -1,0 +1,271 @@
+"""Traversal policies: direction optimization as a first-class layer.
+
+Beamer's direction-optimizing BFS (paper §3.1; Beamer et al. SC'12)
+switches between push (top-down) and pull (bottom-up) expansion per level.
+In the vectorized TPU formulation both directions touch every edge, so
+what survives of the *work* saving is the *representation* switch the
+paper builds its compressed exchanges on: sparse levels want packed id
+streams and push expansion, dense levels want bitmap wires and pull
+expansion.  This module makes that choice a pluggable policy, resolved by
+name through :func:`repro.comm.registry.traversal`:
+
+* ``top_down``      — push: frontier sources propose parents
+  (``segment_min`` over the edge list); the distributed row phase
+  exchanges candidate id streams (the ALLTOALLV analog).
+* ``bottom_up``     — pull: only unreached destinations accumulate
+  candidates, the frontier is probed through its *packed bitmap* (the same
+  vertical width-1 gather the Pallas SpMV kernels use; the ELL hot-spot
+  version is :mod:`repro.kernels.spmv.pull`), and the distributed row
+  phase swaps the id-stream ALLTOALLV for an unreached-bitmap all-gather
+  plus a found-bitmap + bit-packed-parent exchange
+  (:class:`repro.comm.BitmapParentFormat`).
+* ``direction_opt`` — Beamer-style per-level switch driven by the
+  popcount :class:`DensityOracle`, with the switch state threaded through
+  the level-loop carry.
+
+The density signal — the frontier popcount against the alpha/beta
+thresholds — is the same per-chunk stream count the
+:class:`repro.comm.ladder.BucketLadder` buckets on, and the default alpha
+is derived from the ladder's largest sparse capacity
+(:func:`ladder_alpha`): the traversal flips to pull exactly where the wire
+would fall off the id-stream ladder onto its dense floor.  Policy choice
+and wire choice therefore come from one oracle.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm import registry as wire_registry
+from repro.comm.formats import INF, pack_bitmap
+from repro.comm.ladder import BucketLadder
+from repro.kernels.popcount import ops as pc_ops
+from repro.kernels.spmv import ref as spmv_ref
+
+
+def _pad_to_chunk(bits: jax.Array) -> jax.Array:
+    """Zero-pad a membership vector to the 1024-bit packing chunk."""
+    pad = (-bits.shape[0]) % 1024
+    if pad:
+        bits = jnp.concatenate([bits, jnp.zeros((pad,), bits.dtype)])
+    return bits
+
+
+def ladder_alpha(
+    s: int, payload_width: int, threshold=None, default: float = 0.25
+) -> float:
+    """Bottom-up entry density derived from the row ladder's geometry.
+
+    The pull representation wins exactly when the per-chunk candidate count
+    overflows the ladder's largest sparse bucket (the wire would fall to
+    the dense floor); below that, packed id streams are cheaper than the
+    density-independent bitmap+parent exchange.  ``threshold`` must be the
+    same ThresholdPolicy the wire plan's row ladder is built with, so a
+    pruned ladder moves the direction switch too.
+    """
+    ladder = BucketLadder.default(
+        s, floor_words=s, payload_width=payload_width, policy=threshold
+    )
+    return ladder.specs[-1].cap / s if ladder.specs else default
+
+
+@dataclasses.dataclass(frozen=True)
+class DensityOracle:
+    """Popcount-based frontier-density oracle (direction AND wire signal).
+
+    ``local_count`` is the membership popcount over the packed bitmap —
+    computed by the :mod:`repro.kernels.popcount` kernel, and the exact
+    quantity the BucketLadder thresholds on for the wire representation.
+    ``next_direction`` applies alpha/beta hysteresis on the same count.
+    """
+
+    n: int  # vertex count the density is measured against
+    alpha: float = 0.25  # switch to bottom-up above this frontier density
+    beta: float = 0.05  # fall back to top-down below this density
+
+    def local_count(self, bits: jax.Array) -> jax.Array:
+        """Frontier size via the popcount kernel over the packed bitmap."""
+        words = pack_bitmap(_pad_to_chunk(bits))
+        return jnp.sum(pc_ops.popcount_blocks(words)).astype(jnp.int32)
+
+    def next_direction(self, count, was_bottom_up):
+        """Hysteresis: enter pull above alpha*n, leave below beta*n."""
+        c = jnp.asarray(count, jnp.float32)
+        return jnp.where(
+            jnp.asarray(was_bottom_up, bool),
+            c >= self.beta * self.n,
+            c > self.alpha * self.n,
+        )
+
+
+class DistLevelCtx(NamedTuple):
+    """Everything a policy needs to expand one distributed BFS level.
+
+    Built once per rank by :func:`repro.core.distributed_bfs._bfs_local`;
+    the exchange callables come from the wire plan
+    (:class:`repro.comm.registry.WirePlan`), so a policy never touches a
+    collective primitive directly.
+    """
+
+    src_l: jax.Array  # (e_cap,) column-local sources, n_c = padding
+    dst_l: jax.Array  # (e_cap,) row-local destinations, n_r = padding
+    n_r: int  # row-slice width (destinations per grid row)
+    n_c: int  # column-slice width (sources per grid column)
+    s: int  # owned-chunk width
+    c: int  # grid columns
+    col_index: jax.Array  # this rank's grid-column index j
+    row_exchange: Callable | None  # push: (c,s) global candidates -> (s,) min
+    row_exchange_bu: Callable | None  # pull: (c,s) LOCAL candidates -> (s,) min
+    unreached_gather: Callable | None  # (s,) own unreached -> (n_r,) row slice
+
+
+class TraversalPolicy:
+    """One frontier-expansion direction, or a per-level switch over them.
+
+    ``propose_single`` produces the (n,) candidate-parent vector for the
+    single-device driver; ``expand_dist`` runs local expansion + the row
+    exchange inside ``shard_map`` and returns the (s,) min-reduced global
+    candidates for the owned chunk.  All policies produce *identical*
+    parent/level results — they differ in probe representation and wire
+    shape only.
+    """
+
+    name: str = ""
+    starts_bottom_up: bool = False
+    uses_top_down: bool = True  # driver builds the push row exchange
+    uses_bottom_up: bool = False  # driver builds the pull exchanges
+
+    def propose_single(self, src, dst, n, parent, frontier, use_bu):
+        raise NotImplementedError
+
+    def expand_dist(self, ctx: DistLevelCtx, parent, f_col, use_bu):
+        raise NotImplementedError
+
+    def next_direction(self, oracle: DensityOracle, count, use_bu):
+        """Direction for the next level (fixed for single-direction policies)."""
+        return jnp.bool_(self.starts_bottom_up)
+
+
+class TopDownPolicy(TraversalPolicy):
+    name = "top_down"
+
+    def propose_single(self, src, dst, n, parent, frontier, use_bu):
+        # push: every frontier source proposes itself to its neighbors
+        cand = jnp.where(frontier[jnp.minimum(src, n - 1)] & (src < n), src, INF)
+        return jax.ops.segment_min(cand, dst, num_segments=n + 1)[:n]
+
+    def expand_dist(self, ctx, parent, f_col, use_bu):
+        active = f_col[jnp.clip(ctx.src_l, 0, ctx.n_c - 1)] & (ctx.src_l < ctx.n_c)
+        cand = jnp.where(active, ctx.col_index * ctx.n_c + ctx.src_l, INF)
+        prop = jax.ops.segment_min(cand, ctx.dst_l, num_segments=ctx.n_r + 1)
+        return ctx.row_exchange(prop[: ctx.n_r].reshape(ctx.c, ctx.s))
+
+
+class BottomUpPolicy(TraversalPolicy):
+    name = "bottom_up"
+    starts_bottom_up = True
+    uses_top_down = False
+    uses_bottom_up = True
+
+    def propose_single(self, src, dst, n, parent, frontier, use_bu):
+        # pull: probe the *packed* frontier bitmap (the representation
+        # switch; same vertical width-1 gather as kernels/spmv), and only
+        # unreached destinations accumulate candidates
+        n_pad = n + (-n) % 1024
+        words = pack_bitmap(_pad_to_chunk(frontier))
+        hit = spmv_ref.frontier_bit(words, src, n_pad) & (src < n)
+        unreached = parent < 0
+        pull = unreached[jnp.minimum(dst, n - 1)] & (dst < n)
+        cand = jnp.where(hit & pull, src, INF)
+        return jax.ops.segment_min(cand, dst, num_segments=n + 1)[:n]
+
+    def expand_dist(self, ctx, parent, f_col, use_bu):
+        # unreached membership of the whole row slice, gathered as bitmaps
+        # over the grid row — this replaces the id-stream ALLTOALLV sizing
+        unreached = ctx.unreached_gather(parent < 0)  # (n_r,) bool
+        active = (
+            f_col[jnp.clip(ctx.src_l, 0, ctx.n_c - 1)]
+            & (ctx.src_l < ctx.n_c)
+            & unreached[jnp.clip(ctx.dst_l, 0, ctx.n_r - 1)]
+            & (ctx.dst_l < ctx.n_r)
+        )
+        # candidates stay column-LOCAL so the wire payload bit-packs at the
+        # static column-width class; the receiver globalizes per sender
+        cand = jnp.where(active, ctx.src_l, INF)
+        prop = jax.ops.segment_min(cand, ctx.dst_l, num_segments=ctx.n_r + 1)
+        return ctx.row_exchange_bu(prop[: ctx.n_r].reshape(ctx.c, ctx.s))
+
+
+class DirectionOptPolicy(TraversalPolicy):
+    """Beamer-style per-level switch between push and pull.
+
+    The direction flag lives in the level-loop carry; both branches are in
+    the traced program (``lax.cond``) and the flag is group-uniform because
+    it derives from the globally ``psum``-ed frontier count — the same
+    consensus shape the AdaptiveExchange uses for bucket dispatch.
+    """
+
+    name = "direction_opt"
+    uses_top_down = True
+    uses_bottom_up = True
+
+    def __init__(self):
+        self._td = TopDownPolicy()
+        self._bu = BottomUpPolicy()
+
+    def propose_single(self, src, dst, n, parent, frontier, use_bu):
+        return jax.lax.cond(
+            use_bu,
+            lambda _: self._bu.propose_single(src, dst, n, parent, frontier, use_bu),
+            lambda _: self._td.propose_single(src, dst, n, parent, frontier, use_bu),
+            operand=None,
+        )
+
+    def expand_dist(self, ctx, parent, f_col, use_bu):
+        return jax.lax.cond(
+            use_bu,
+            lambda _: self._bu.expand_dist(ctx, parent, f_col, use_bu),
+            lambda _: self._td.expand_dist(ctx, parent, f_col, use_bu),
+            operand=None,
+        )
+
+    def next_direction(self, oracle, count, use_bu):
+        return oracle.next_direction(count, use_bu)
+
+
+def level_once(src, dst, n, policy: TraversalPolicy, oracle: DensityOracle, state):
+    """One single-device BFS level: policy proposal + state update.
+
+    The single shared implementation behind both ``bfs()`` and
+    ``bfs_levels()`` — ``state`` is any NamedTuple with parent / level /
+    frontier / depth / active / use_bu fields.
+    """
+    proposed = policy.propose_single(
+        src, dst, n, state.parent, state.frontier, state.use_bu
+    )
+    new = (proposed < INF) & (state.parent < 0)
+    count = oracle.local_count(new)
+    return state._replace(
+        parent=jnp.where(new, proposed, state.parent),
+        level=jnp.where(new, state.depth + 1, state.level),
+        frontier=new,
+        depth=state.depth + 1,
+        active=count > 0,
+        use_bu=policy.next_direction(oracle, count, state.use_bu),
+    )
+
+
+def resolve(name: str) -> TraversalPolicy:
+    """Resolve a policy by name through the unified registry."""
+    return wire_registry.traversal(name)
+
+
+POLICIES = ("top_down", "bottom_up", "direction_opt")
+
+for _p in (TopDownPolicy(), BottomUpPolicy(), DirectionOptPolicy()):
+    wire_registry.register_traversal(_p)
+del _p

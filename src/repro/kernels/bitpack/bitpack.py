@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import resolve_interpret
 from repro.kernels.bitpack.ref import B_CLASSES, CHUNK
 
 VALS_PER_BLOCK = 4096  # 4 chunks = (32, 128) tile
@@ -46,8 +47,9 @@ def _unpack_kernel(w_ref, o_ref, *, b: int):
 
 
 @functools.partial(jax.jit, static_argnames=("b", "interpret"))
-def pack_pallas(values: jax.Array, b: int, interpret: bool = True) -> jax.Array:
+def pack_pallas(values: jax.Array, b: int, interpret: bool | None = None) -> jax.Array:
     """Pack uint32 values (length multiple of 4096) at width ``b``."""
+    interpret = resolve_interpret(interpret)
     assert b in B_CLASSES, b
     if b == 32:
         return values.astype(jnp.uint32)
@@ -67,8 +69,9 @@ def pack_pallas(values: jax.Array, b: int, interpret: bool = True) -> jax.Array:
 
 
 @functools.partial(jax.jit, static_argnames=("b", "interpret"))
-def unpack_pallas(words: jax.Array, b: int, interpret: bool = True) -> jax.Array:
+def unpack_pallas(words: jax.Array, b: int, interpret: bool | None = None) -> jax.Array:
     """Inverse of :func:`pack_pallas`."""
+    interpret = resolve_interpret(interpret)
     assert b in B_CLASSES, b
     if b == 32:
         return words.astype(jnp.uint32)

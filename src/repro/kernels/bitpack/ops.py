@@ -19,13 +19,13 @@ def _use_pallas() -> bool:
 
 def pack(values: jax.Array, b: int) -> jax.Array:
     if _use_pallas() and values.shape[0] % bitpack.VALS_PER_BLOCK == 0:
-        return bitpack.pack_pallas(values, b, interpret=False)
+        return bitpack.pack_pallas(values, b)
     return ref.pack(values, b)
 
 
 def unpack(words: jax.Array, b: int) -> jax.Array:
     if _use_pallas() and (words.shape[0] * 32 // b) % bitpack.VALS_PER_BLOCK == 0:
-        return bitpack.unpack_pallas(words, b, interpret=False)
+        return bitpack.unpack_pallas(words, b)
     return ref.unpack(words, b)
 
 

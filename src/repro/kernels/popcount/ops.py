@@ -9,9 +9,14 @@ from repro.kernels.popcount import popcount, ref
 
 
 def popcount_blocks(words: jax.Array) -> jax.Array:
-    if jax.default_backend() == "tpu" and words.shape[0] % popcount.WORDS_PER_BLOCK == 0:
-        return popcount.popcount_blocks_pallas(words, interpret=False)
-    blocks = words.reshape(-1, min(words.shape[0], popcount.WORDS_PER_BLOCK))
+    """Per-block popcounts of a uint32 word stream (any length: the last
+    block is zero-padded to the kernel's 1024-word geometry)."""
+    pad = (-words.shape[0]) % popcount.WORDS_PER_BLOCK
+    if pad:
+        words = jnp.concatenate([words, jnp.zeros((pad,), words.dtype)])
+    if jax.default_backend() == "tpu":
+        return popcount.popcount_blocks_pallas(words)
+    blocks = words.reshape(-1, popcount.WORDS_PER_BLOCK)
     return jnp.sum(ref.popcount_words(blocks), axis=1)
 
 

@@ -13,6 +13,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import resolve_interpret
+
 TILE = (8, 128)
 WORDS_PER_BLOCK = TILE[0] * TILE[1]
 
@@ -27,8 +29,9 @@ def _popcount_kernel(w_ref, o_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def popcount_blocks_pallas(words: jax.Array, interpret: bool = True) -> jax.Array:
+def popcount_blocks_pallas(words: jax.Array, interpret: bool | None = None) -> jax.Array:
     """Per-1024-word-block popcounts; words length % 1024 == 0."""
+    interpret = resolve_interpret(interpret)
     n = words.shape[0]
     assert n % WORDS_PER_BLOCK == 0, n
     grid = n // WORDS_PER_BLOCK

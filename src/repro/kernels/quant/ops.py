@@ -9,7 +9,7 @@ from repro.kernels.quant import quant, ref
 
 def quantize(x: jax.Array) -> tuple[jax.Array, jax.Array]:
     if jax.default_backend() == "tpu" and x.shape[0] % (quant.ROWS * ref.GROUP) == 0:
-        return quant.quantize_pallas(x, interpret=False)
+        return quant.quantize_pallas(x)
     return ref.quantize(x)
 
 

@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import resolve_interpret
 from repro.kernels.quant.ref import GROUP
 
 ROWS = 8  # rows per grid step
@@ -27,7 +28,8 @@ def _quant_kernel(x_ref, q_ref, s_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def quantize_pallas(x: jax.Array, interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+def quantize_pallas(x: jax.Array, interpret: bool | None = None) -> tuple[jax.Array, jax.Array]:
+    interpret = resolve_interpret(interpret)
     n = x.shape[0]
     assert n % (ROWS * GROUP) == 0, n
     grid = n // (ROWS * GROUP)

@@ -4,7 +4,7 @@ from __future__ import annotations
 
 import jax
 
-from repro.kernels.spmv import ref, spmv
+from repro.kernels.spmv import pull, ref, spmv
 
 
 def spmv_min(nbr: jax.Array, f_words: jax.Array, n_cols: int) -> jax.Array:
@@ -14,5 +14,19 @@ def spmv_min(nbr: jax.Array, f_words: jax.Array, n_cols: int) -> jax.Array:
         and n_rows % spmv.ROW_TILE == 0
         and max_deg % spmv.DEG_CHUNK == 0
     ):
-        return spmv.spmv_min_pallas(nbr, f_words, n_cols, interpret=False)
+        return spmv.spmv_min_pallas(nbr, f_words, n_cols)
     return ref.spmv_min(nbr, f_words, n_cols)
+
+
+def spmv_pull_min(
+    nbr: jax.Array, f_words: jax.Array, u_words: jax.Array, n_cols: int
+) -> jax.Array:
+    """Pull direction: rows whose *unreached* bit is clear are masked to INF."""
+    n_rows, max_deg = nbr.shape
+    if (
+        jax.default_backend() == "tpu"
+        and n_rows % pull.ROW_TILE == 0
+        and max_deg % pull.DEG_CHUNK == 0
+    ):
+        return pull.spmv_pull_min_pallas(nbr, f_words, u_words, n_cols)
+    return ref.spmv_pull_min(nbr, f_words, u_words, n_cols)

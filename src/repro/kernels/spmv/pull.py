@@ -1,0 +1,89 @@
+"""Pallas TPU kernel: pull-direction (bottom-up) ELL frontier expansion.
+
+The direction-optimized counterpart of :mod:`repro.kernels.spmv.spmv`: at
+dense levels every *unreached* destination probes its neighbor tile against
+the VMEM-resident frontier bitmap (Beamer's bottom-up step, paper §3.1).
+The membership probe is the same vertical width-1 bitmap gather the push
+kernel uses; the pull direction adds a second resident bitmap — the
+unreached vector over the destination rows — that masks finished rows out
+of the per-row min before it is accumulated.
+
+Grid = (row tiles, degree chunks); both bitmaps use BlockSpecs with a
+constant index map so they stay VMEM-resident across the whole grid (at
+scale 30 the per-rank row bitmap is n_r/8 bytes — a few MB, well inside
+v5e's 16 MB VMEM next to the column bitmap).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import resolve_interpret
+from repro.kernels.spmv.ref import INF
+from repro.kernels.spmv.spmv import DEG_CHUNK, ROW_TILE
+
+
+def _pull_kernel(nbr_ref, f_ref, u_ref, o_ref, *, n_cols: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    nbr = nbr_ref[...]  # (ROW_TILE, DEG_CHUNK) int32
+    # frontier probe: identical bitmap gather to the push kernel
+    safe = jnp.minimum(nbr, n_cols - 1)
+    within = safe % 1024
+    word_idx = (safe // 1024) * 32 + within % 32
+    shift = (within // 32).astype(jnp.uint32)
+    words = f_ref[word_idx]  # gather (ROW_TILE, DEG_CHUNK) uint32
+    hit = ((words >> shift) & jnp.uint32(1)) == 1
+    cand = jnp.where(hit & (nbr < n_cols), nbr, INF)
+    tile_min = jnp.min(cand, axis=1)  # (ROW_TILE,)
+    # unreached mask: probe the row bitmap at this tile's destination ids
+    rows = i * ROW_TILE + jax.lax.broadcasted_iota(jnp.int32, (ROW_TILE, 1), 0)
+    r_within = rows % 1024
+    r_word = (rows // 1024) * 32 + r_within % 32
+    r_shift = (r_within // 32).astype(jnp.uint32)
+    unreached = ((u_ref[r_word] >> r_shift) & jnp.uint32(1)) == 1  # (ROW_TILE, 1)
+    tile_min = jnp.where(unreached[:, 0], tile_min, INF)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = tile_min
+
+    @pl.when(j > 0)
+    def _acc():
+        o_ref[...] = jnp.minimum(o_ref[...], tile_min)
+
+
+@functools.partial(jax.jit, static_argnames=("n_cols", "interpret"))
+def spmv_pull_min_pallas(
+    nbr: jax.Array,
+    f_words: jax.Array,
+    u_words: jax.Array,
+    n_cols: int,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """nbr (n_rows, max_deg) int32 (pad = n_cols); f_words / u_words are
+    vertical b=1 bitmaps over n_cols / n_rows bits -> (n_rows,) int32 min
+    frontier neighbor for unreached rows, INF otherwise."""
+    interpret = resolve_interpret(interpret)
+    n_rows, max_deg = nbr.shape
+    assert n_rows % ROW_TILE == 0, n_rows
+    assert max_deg % DEG_CHUNK == 0, max_deg
+    assert n_cols % 1024 == 0 and f_words.shape[0] == n_cols // 32
+    assert n_rows % 1024 == 0 and u_words.shape[0] == n_rows // 32
+    grid = (n_rows // ROW_TILE, max_deg // DEG_CHUNK)
+    return pl.pallas_call(
+        functools.partial(_pull_kernel, n_cols=n_cols),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ROW_TILE, DEG_CHUNK), lambda i, j: (i, j)),
+            pl.BlockSpec((f_words.shape[0],), lambda i, j: (0,)),  # resident
+            pl.BlockSpec((u_words.shape[0],), lambda i, j: (0,)),  # resident
+        ],
+        out_specs=pl.BlockSpec((ROW_TILE,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_rows,), jnp.int32),
+        interpret=interpret,
+    )(nbr, f_words.astype(jnp.uint32), u_words.astype(jnp.uint32))

@@ -53,3 +53,18 @@ def spmv_min(nbr: jax.Array, f_words: jax.Array, n_cols: int) -> jax.Array:
     hit = frontier_bit(f_words, nbr, n_cols)
     cand = jnp.where(hit, nbr, INF)
     return jnp.min(cand, axis=1)
+
+
+def spmv_pull_min(
+    nbr: jax.Array, f_words: jax.Array, u_words: jax.Array, n_cols: int
+) -> jax.Array:
+    """Pull (bottom-up) expansion: only *unreached* rows probe their
+    neighbor lists against the frontier bitmap.
+
+    ``u_words``: vertical b=1 bitmap of n_rows bits — bit set when the row
+    vertex is still unreached.  Rows with a clear bit produce INF (they
+    neither need a parent nor should pay for the probe on hardware).
+    """
+    n_rows = nbr.shape[0]
+    unreached = frontier_bit(u_words, jnp.arange(n_rows, dtype=jnp.int32), n_rows)
+    return jnp.where(unreached, spmv_min(nbr, f_words, n_cols), INF)

@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import resolve_interpret
 from repro.kernels.spmv.ref import INF
 
 ROW_TILE = 1024
@@ -44,10 +45,11 @@ def _spmv_kernel(nbr_ref, f_ref, o_ref, *, n_cols: int):
 
 @functools.partial(jax.jit, static_argnames=("n_cols", "interpret"))
 def spmv_min_pallas(
-    nbr: jax.Array, f_words: jax.Array, n_cols: int, interpret: bool = True
+    nbr: jax.Array, f_words: jax.Array, n_cols: int, interpret: bool | None = None
 ) -> jax.Array:
     """nbr (n_rows, max_deg) int32 (pad = n_cols), f_words vertical b=1
     bitmap of n_cols bits -> (n_rows,) int32 min frontier neighbor / INF."""
+    interpret = resolve_interpret(interpret)
     n_rows, max_deg = nbr.shape
     assert n_rows % ROW_TILE == 0, n_rows
     assert max_deg % DEG_CHUNK == 0, max_deg

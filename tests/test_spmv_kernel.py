@@ -7,7 +7,7 @@ from hypothesis import given, settings
 from hypothesis import strategies as st
 
 from repro.kernels.bitpack import ref as bpref
-from repro.kernels.spmv import ops, ref, spmv
+from repro.kernels.spmv import ops, pull, ref, spmv
 
 
 def _python_oracle(nbr, bits, n_cols):
@@ -39,6 +39,36 @@ def test_spmv_kernel_sweep(n_rows, max_deg, density):
     np.testing.assert_array_equal(
         np.asarray(ops.spmv_min(jnp.asarray(nbr), f_words, n_cols)), expect
     )
+
+
+@pytest.mark.parametrize("n_rows,max_deg", [(1024, 8), (2048, 16)])
+@pytest.mark.parametrize("density,unreached_frac", [(0.05, 0.5), (0.5, 0.1), (0.5, 1.0)])
+def test_spmv_pull_kernel_sweep(n_rows, max_deg, density, unreached_frac):
+    """Pull direction: unreached rows probe the frontier bitmap, finished
+    rows are masked to INF — Pallas kernel vs jnp oracle vs python loop."""
+    n_cols = 4096
+    rng = np.random.default_rng(n_rows * max_deg + int(100 * density))
+    nbr = rng.integers(0, n_cols, size=(n_rows, max_deg)).astype(np.int32)
+    nbr[rng.random((n_rows, max_deg)) < 0.3] = n_cols  # padding
+    bits = rng.random(n_cols) < density
+    unreached = rng.random(n_rows) < unreached_frac
+    f_words = bpref.pack(jnp.asarray(bits.astype(np.uint32)), 1)
+    u_words = bpref.pack(jnp.asarray(unreached.astype(np.uint32)), 1)
+    expect = np.where(unreached, _python_oracle(nbr, bits, n_cols), ref.INF)
+    for fn in (ref.spmv_pull_min, pull.spmv_pull_min_pallas, ops.spmv_pull_min):
+        np.testing.assert_array_equal(
+            np.asarray(fn(jnp.asarray(nbr), f_words, u_words, n_cols)), expect
+        )
+
+
+def test_spmv_pull_all_reached_is_inf():
+    """With every row reached the pull produces no candidates at all."""
+    n_rows = n_cols = 1024
+    nbr = np.zeros((n_rows, 8), np.int32)  # everyone neighbors vertex 0
+    f_words = bpref.pack(jnp.ones(n_cols, jnp.uint32), 1)  # full frontier
+    u_words = bpref.pack(jnp.zeros(n_rows, jnp.uint32), 1)  # nobody unreached
+    out = np.asarray(pull.spmv_pull_min_pallas(jnp.asarray(nbr), f_words, u_words, n_cols))
+    assert (out == ref.INF).all()
 
 
 @settings(max_examples=10, deadline=None)

@@ -1,0 +1,194 @@
+"""Direction-optimizing traversal policies: equivalence + oracle + wires.
+
+The contract: ``bottom_up`` and ``direction_opt`` produce level-identical
+(and parent-identical) results to ``top_down`` on arbitrary graphs, across
+every wire mode — the directions differ in probe representation and wire
+shape only.  The density oracle's popcount equals the plain frontier sum,
+and its hysteresis band behaves.
+"""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.comm import registry as wire_registry
+from repro.core import bfs, traversal, validate
+from repro.graphgen import builder, kronecker
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+ALT_POLICIES = ("bottom_up", "direction_opt")
+
+
+def _device_graph(g):
+    return jnp.asarray(g.src.astype(np.int32)), jnp.asarray(g.dst.astype(np.int32))
+
+
+def test_policies_registered():
+    assert set(wire_registry.available_traversals()) >= set(traversal.POLICIES)
+    with pytest.raises(KeyError):
+        wire_registry.traversal("sideways")
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 1 << 16), root=st.integers(0, 255))
+def test_policies_level_identical_random_graphs(seed, root):
+    """bottom_up and direction_opt reproduce top_down's parent AND level
+    arrays exactly on arbitrary random graphs."""
+    rng = np.random.default_rng(seed)
+    n = 256
+    m = rng.integers(1, 2048)
+    edges = rng.integers(0, n, size=(m, 2))
+    g = builder.build_csr(edges, n=n)
+    src, dst = _device_graph(g)
+    base = bfs.bfs(src, dst, jnp.int32(root), g.n, policy="top_down")
+    ref = validate.reference_bfs(g, root)
+    np.testing.assert_array_equal(np.asarray(base.level), ref)
+    for policy in ALT_POLICIES:
+        res = bfs.bfs(src, dst, jnp.int32(root), g.n, policy=policy)
+        np.testing.assert_array_equal(np.asarray(res.parent), np.asarray(base.parent))
+        np.testing.assert_array_equal(np.asarray(res.level), np.asarray(base.level))
+        assert int(res.n_levels) == int(base.n_levels)
+        v = validate.validate_bfs_tree(g, np.asarray(res.parent), root, np.asarray(res.level))
+        assert v.ok, (policy, v.failures)
+
+
+@pytest.mark.parametrize("policy", ALT_POLICIES)
+def test_bfs_levels_policy_sizes(policy):
+    g = builder.build_csr(kronecker.kronecker_edges(8, seed=1), n=256)
+    src, dst = _device_graph(g)
+    res, sizes = bfs.bfs_levels(src, dst, jnp.int32(0), g.n, max_levels=16, policy=policy)
+    n_reached = int((np.asarray(res.level) >= 0).sum())
+    assert int(np.asarray(sizes).sum()) + 1 == n_reached
+
+
+def test_oracle_popcount_matches_sum():
+    rng = np.random.default_rng(0)
+    # 3000: not a 1024-bit multiple; 33*1024: packed words not a multiple of
+    # the popcount kernel's 1024-word block (regression: fallback reshape)
+    for n in (3000, 33 * 1024):
+        oracle = traversal.DensityOracle(n)
+        for density in (0.0, 0.01, 0.5, 1.0):
+            bits = jnp.asarray(rng.random(n) < density)
+            assert int(oracle.local_count(bits)) == int(np.asarray(bits).sum())
+
+
+def test_oracle_hysteresis():
+    oracle = traversal.DensityOracle(1000, alpha=0.25, beta=0.05)
+    # below alpha from top-down: stay top-down
+    assert not bool(oracle.next_direction(np.int32(250), False))
+    assert bool(oracle.next_direction(np.int32(251), False))
+    # inside the hysteresis band from bottom-up: stay bottom-up
+    assert bool(oracle.next_direction(np.int32(100), True))
+    assert not bool(oracle.next_direction(np.int32(49), True))
+
+
+def test_ladder_alpha_matches_row_ladder_edge():
+    from repro.comm.ladder import BucketLadder
+
+    s, wp = 8192, 16
+    ladder = BucketLadder.default(s, floor_words=s, payload_width=wp)
+    assert ladder.specs  # sparse buckets exist at this geometry
+    assert traversal.ladder_alpha(s, wp) == ladder.specs[-1].cap / s
+
+
+def test_direction_opt_beats_top_down_on_dense_level_bench():
+    """Acceptance: on the scale-15 2x2 bench, direction_opt selects
+    bottom-up on at least one dense level and moves fewer row-phase wire
+    bytes there than top_down's ALLTOALLV (the BENCH_comm.json policy
+    dimension)."""
+    from benchmarks import bfs_comm
+
+    table, levels = bfs_comm.run(scale=15, rows=2, cols=2)
+    td = {d["level"]: d for d in levels["top_down"]}
+    bu = [d for d in levels["direction_opt"] if d["direction"] == "bottom_up"]
+    assert bu, "direction_opt never selected bottom-up"
+    assert any(d["density"] > 0.25 for d in bu)  # a genuinely dense level
+    assert any(
+        d["row_bytes_packed"] < td[d["level"]]["row_bytes_packed"] for d in bu
+    ), (bu, td)
+    # the policy dimension is present in the table for every zone
+    pols = {r["policy"] for r in table}
+    assert pols == set(traversal.POLICIES)
+
+
+def _run(snippet: str, devices: int = 4, timeout: int = 900) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run(
+        [sys.executable, "-c", snippet],
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=timeout,
+    )
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr[-3000:]}"
+    return out.stdout
+
+
+@pytest.mark.slow
+def test_distributed_policies_all_modes_4dev():
+    """Every policy x wire-mode combination matches the host oracle; a low
+    alpha forces direction_opt through its bottom-up branch for real."""
+    out = _run(
+        """
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import csr as csrmod, distributed_bfs as dbfs, validate
+from repro.graphgen import builder, kronecker
+g = builder.build_csr(kronecker.kronecker_edges(10, seed=3), n=1<<10)
+mesh = jax.make_mesh((2, 2), ("data", "model"))
+bg = csrmod.partition_2d(g, rows=2, cols=2)
+ref = validate.reference_bfs(g, 0)
+for mode in ("raw", "bitmap", "auto"):
+    for pol in ("top_down", "bottom_up", "direction_opt"):
+        cfg = dbfs.DistBFSConfig(mode=mode, policy=pol, alpha=0.01, beta=0.002)
+        fn = dbfs.build_bfs(mesh, bg, cfg)
+        src_l, dst_l = dbfs.shard_blocked(mesh, bg, cfg)
+        parent, level, depth = fn(src_l, dst_l, jnp.int32(0))
+        level = np.asarray(level)[:g.n]
+        assert np.array_equal(level, ref), (mode, pol)
+        assert validate.validate_bfs_tree(g, np.asarray(parent)[:g.n], 0, level).ok
+print("DIST POLICIES OK")
+""",
+        devices=4,
+    )
+    assert "DIST POLICIES OK" in out
+
+
+@pytest.mark.slow
+def test_comm_stats_match_hlo_bottom_up_4dev():
+    """Satellite acceptance: the CommStats ledger still matches the lowered
+    HLO per op kind for the bottom-up exchanges (found-bitmap row phase +
+    unreached all-gather), in every wire mode, for both pull policies."""
+    out = _run(
+        """
+import jax, jax.numpy as jnp
+from repro.comm import CommStats
+from repro.core import csr as csrmod, distributed_bfs as dbfs
+from repro.launch import roofline
+part = csrmod.Partition2D(n=1 << 16, n_orig=1 << 16, rows=2, cols=2)
+mesh = jax.make_mesh((2, 2), ("data", "model"))
+blk = jax.ShapeDtypeStruct((2, 2, 4096), jnp.int32)
+for mode in ("raw", "bitmap", "auto"):
+    for pol in ("bottom_up", "direction_opt"):
+        stats = CommStats()
+        fn = dbfs.build_bfs(mesh, part, dbfs.DistBFSConfig(mode=mode, policy=pol), stats=stats)
+        compiled = jax.jit(fn).lower(blk, blk, jax.ShapeDtypeStruct((), jnp.int32)).compile()
+        cmp = roofline.compare_comm_stats(stats, compiled.as_text())
+        assert cmp.match, (mode, pol, cmp.diff())
+        want = {"bfs/column", "bfs/row-pull", "bfs/transpose", "bfs/termination", "bfs/unreached"}
+        if pol == "direction_opt":
+            want |= {"bfs/row"}
+        assert set(cmp.per_phase) == want, (mode, pol, cmp.per_phase)
+print("BU COMM STATS MATCH OK")
+""",
+        devices=4,
+    )
+    assert "BU COMM STATS MATCH OK" in out
