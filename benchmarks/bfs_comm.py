@@ -21,6 +21,17 @@ this benchmark:
             (per-level switch on the shared density oracle — the same
             alpha the device driver derives from the bucket ladder).
 
+  plans: alltoall (the direct row exchange) vs btfly (ButterFly BFS:
+         log2(C) staged ppermute rounds whose merged stream is re-bucketed
+         per hop — the replay mirrors the device stage schedule, logs each
+         stage's consensus format, and its bytes must reconcile with the
+         static byte model; scripts/check_bench_comm.py enforces that).
+
+The row phase buckets each (sender column, destination chunk) stream
+separately and takes the max over the grid row — the device's pmax
+consensus — NOT the union stream per owner chunk, which underestimates
+both the counts and the consensus escalation.
+
 Time reduction (Table 7.5 analog) uses the threshold-policy link model —
 compress+transmit+decompress at measured codec speeds vs plain transmit.
 """
@@ -30,6 +41,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.comm import BitmapFormat, BitmapParentFormat, CommStats, DenseFormat, RawIdFormat
+from repro.comm import butterfly
 from repro.comm.ladder import BucketLadder
 from repro.compression import codecs, threshold
 from repro.core import csr as csrmod
@@ -44,17 +56,157 @@ ZONES = (
     "predecessorReduction",
 )
 FORMATS = ("raw", "bitmap", "packed", "bp128d")
+#: exchange plans of the row phase: the direct ALLTOALLV and the staged
+#: butterfly (log2(C) ppermute rounds, merged stream re-bucketed per hop)
+PLANS = ("alltoall", "btfly")
 POLICIES = traversal.POLICIES
+
+
+def _host_bucket(ladder: BucketLadder, ids: np.ndarray) -> int:
+    """The ladder's bucket for one sorted id stream (host mirror of
+    ``BucketLadder.bucket_for`` — smallest spec whose id and exception
+    capacities both fit)."""
+    count = ids.size
+    exc = int((codecs.delta_encode(ids.astype(np.uint32)) >> 16 > 0).sum()) if count else 0
+    for i, spec in enumerate(ladder.specs):
+        if count <= spec.cap and exc <= spec.exc_cap:
+            return i
+    return len(ladder.specs)
+
+
+def _bucket_wire(ladder: BucketLadder, bucket: int, floor_fmt=None):
+    """(format name, wire bytes) of one subchunk at ``bucket``."""
+    if bucket < len(ladder.specs):
+        fmt = ladder.formats()[bucket]
+        return fmt.name, fmt.wire_bytes
+    if floor_fmt is not None:
+        return floor_fmt.name, floor_fmt.wire_bytes
+    return "bitmap", 4 * ladder.floor_words
 
 
 def _packed_wire_bytes(ladder: BucketLadder, ids: np.ndarray) -> int:
     """Wire bytes of one packed stream under the ladder's bucket choice."""
-    count = ids.size
-    exc = int((codecs.delta_encode(ids.astype(np.uint32)) >> 16 > 0).sum()) if count else 0
-    b = int(ladder.bucket_for(np.int32(count), np.int32(exc)))
-    if b < len(ladder.specs):
-        return ladder.formats()[b].wire_bytes
-    return 4 * ladder.floor_words
+    return _bucket_wire(ladder, _host_bucket(ladder, ids))[1]
+
+
+def _btfly_row_stage_replay(streams, cols: int, ladder: BucketLadder,
+                            floor_fmt):
+    """Host replay of the butterfly row phase over ONE grid row.
+
+    ``streams[(j, k)]``: sorted local candidate ids sender column ``j``
+    holds for the row's ``k``-th destination chunk.  Mirrors the device
+    schedule exactly — fold, log2(P) pairwise stages, unfold — including the
+    per-stage row-wide format consensus (max bucket over every subchunk on
+    the wire that stage) and the union-merge that the next stage re-buckets.
+    Returns (total bytes, stage log)."""
+    sched = butterfly.ButterflySchedule(cols)
+    p, extra, slots = sched.p, sched.extra, sched.slots
+    empty = np.empty(0, np.int64)
+
+    def leaf_streams(j):
+        rows_ = {}
+        for r in range(p):
+            rows_[(r, 0)] = streams.get((j, r), empty)
+            if slots == 2:
+                rows_[(r, 1)] = streams.get((j, p + r), empty) if r < extra else empty
+        return rows_
+
+    state = {j: leaf_streams(j) for j in range(cols)}
+    total = 0
+    log = []
+
+    def do_exchange(label, sends):
+        """sends: list of (src, dst, [leaf keys]) — consensus + merge."""
+        nonlocal total
+        blocks = {src: [state[src][key] for key in keys] for src, dst, keys in sends}
+        bucket = max(
+            (_host_bucket(ladder, ids) for blk in blocks.values() for ids in blk),
+            default=0,
+        )
+        fmt, unit = _bucket_wire(ladder, bucket, floor_fmt)
+        n_sub = len(sends[0][2])
+        assert all(len(keys) == n_sub for _, _, keys in sends)
+        nbytes = len(sends) * n_sub * unit
+        total += nbytes
+        log.append({"stage": label, "fmt": fmt, "senders": len(sends),
+                    "subchunks": n_sub, "bytes": nbytes})
+        merged = {}
+        for src, dst, keys in sends:
+            for key in keys:
+                merged.setdefault(dst, {})[key] = np.union1d(
+                    state[dst][key], state[src][key]
+                )
+        for dst, upd in merged.items():
+            state[dst].update(upd)
+
+    all_leaves = [(r, sl) for r in range(p) for sl in range(slots)]
+    if extra:
+        do_exchange(
+            "fold", [(p + e, e, all_leaves) for e in range(extra)]
+        )
+    for t in range(sched.n_stages):
+        m = 1 << t
+        sends = []
+        for j in range(p):
+            send_rows = [((j ^ m) & (2 * m - 1)) + 2 * m * i
+                         for i in range(sched.stage_blocks(t))]
+            keys = [(r, sl) for r in send_rows for sl in range(slots)]
+            sends.append((j, j ^ m, keys))
+        do_exchange(str(t), sends)
+    if extra:
+        do_exchange(
+            "unfold", [(e, p + e, [(e, 1)]) for e in range(extra)]
+        )
+    return total, log
+
+
+def _btfly_unreached_stage_replay(chunk_ids, s: int, cols: int,
+                                  ladder: BucketLadder):
+    """Host replay of the staged unreached all-gather over one grid row.
+
+    ``chunk_ids[k]``: sorted local unreached ids of the row's ``k``-th
+    chunk.  The doubling block keeps chunk identity, so per-subchunk
+    buckets never change — only the block size per stage does."""
+    sched = butterfly.ButterflySchedule(cols)
+    p, extra, slots = sched.p, sched.extra, sched.slots
+    bitmap = BitmapFormat(s)
+    empty = np.empty(0, np.int64)
+
+    def leaf_ids(r, sl):
+        q = r if sl == 0 else p + r
+        return chunk_ids[q] if (sl == 0 or r < extra) else empty
+
+    total = 0
+    log = []
+
+    def do_exchange(label, n_senders, leaf_sets):
+        nonlocal total
+        bucket = max(
+            (_host_bucket(ladder, leaf_ids(r, sl)) for leaves in leaf_sets
+             for r, sl in leaves),
+            default=0,
+        )
+        fmt, unit = _bucket_wire(ladder, bucket, bitmap)
+        n_sub = len(leaf_sets[0])
+        nbytes = n_senders * n_sub * unit
+        total += nbytes
+        log.append({"stage": label, "fmt": fmt, "senders": n_senders,
+                    "subchunks": n_sub, "bytes": nbytes})
+
+    if extra:
+        do_exchange("fold", extra, [[(e, 1)] for e in range(extra)])
+    for t in range(sched.n_stages):
+        blk = 1 << t
+        sets = []
+        for j in range(p):
+            start = (j >> t) << t
+            sets.append([(start + i, sl) for i in range(blk)
+                         for sl in range(slots)])
+        do_exchange(str(t), p, sets)
+    if extra:
+        all_leaves = [(r, sl) for r in range(p) for sl in range(slots)]
+        do_exchange("unfold", extra, [all_leaves for _ in range(extra)])
+    return total, log
 
 
 def build_replay_graph(scale: int, rows: int, cols: int, seed: int = 1):
@@ -83,6 +235,10 @@ def simulate_zones(
     wp = parent_width_class(part.n_c)
     ladder = BucketLadder.default(s)  # column (membership vs 1-bit floor)
     row_ladder = BucketLadder.default(s, floor_words=s, payload_width=wp)
+    # the butterfly's row wire: global-parent payload class + its dense
+    # floor (found-bitmap + packed parents) — the same geometry the device
+    # plan builds, so stage formats reconcile with the static byte model
+    bt_ladder, bt_floor = butterfly.row_wire(s, part.n)
     # the SAME oracle the device driver uses: direction flips where the row
     # ladder's sparse capacities run out
     oracle = traversal.DensityOracle(part.n, alpha=traversal.ladder_alpha(s, wp))
@@ -97,6 +253,8 @@ def simulate_zones(
         stats.add("vertexBroadcast", fmt, "all-gather", 8 * rows * cols)
     max_level = int(level.max())
     owner = np.minimum(np.arange(part.n) // s, rows * cols - 1)
+    level_pad = np.full(part.n, -1, level.dtype)
+    level_pad[: g.n] = level
 
     use_bu = policy == "bottom_up"  # host mirror of the carry's use_bu flag
     directions = []
@@ -130,18 +288,56 @@ def simulate_zones(
         # buckets on (the new frontier alone badly underestimates dense
         # levels, where most of the graph neighbors the frontier).
         e_mask = level[g.src] == lv
-        cand = np.unique(g.dst[e_mask]) if e_mask.any() else np.empty(0, np.int64)
+        esrc = g.src[e_mask]
+        edst = g.dst[e_mask]
+        cand = np.unique(edst) if edst.size else np.empty(0, np.int64)
+        if bu:
+            # pull: only unreached destinations accumulate candidates
+            un_mask = (level[edst] > lv) | (level[edst] < 0)
+            esrc, edst = esrc[un_mask], edst[un_mask]
+        # split candidates by SENDER grid column: the device buckets each
+        # sender's per-destination subchunk separately and takes a pmax
+        # consensus over the grid row — the union stream per owner chunk
+        # underestimates both the counts and the consensus
+        key = (esrc // part.n_c) * part.n + edst
+        pairs = np.unique(key) if key.size else np.empty(0, np.int64)
+        p_col, p_dst = pairs // part.n, pairs % part.n
+        p_q = owner[p_dst] if p_dst.size else np.empty(0, np.int64)
+        # pairs are sorted by (sender col, dst), so (sender col, chunk)
+        # groups are contiguous runs: one searchsorted-style split, no
+        # per-pair Python loop
+        group = p_col * (rows * cols) + p_q
+        cuts = np.flatnonzero(np.diff(group)) + 1
+        streams = {}  # (grid row, sender col, owner chunk) -> local ids
+        if pairs.size:
+            for start, stop in zip(np.r_[0, cuts], np.r_[cuts, pairs.size]):
+                jc, q = int(p_col[start]), int(p_q[start])
+                streams[(q // cols, jc, q)] = p_dst[start:stop] - q * s
+
         nxt = np.nonzero(level == lv + 1)[0]
         n_senders = cols - 1
         row_bytes = {f: 0 for f in FORMATS}
+        empty = np.empty(0, np.int64)
         if not bu:
-            for q in range(rows * cols):
-                ids = cand[owner[cand] == q] - q * s
-                row_bytes["raw"] += dense.wire_bytes * n_senders
-                row_bytes["bitmap"] += dense.wire_bytes * n_senders  # parents stay dense
-                row_bytes["packed"] += _packed_wire_bytes(row_ladder, ids) * n_senders
-                blob = bp.encode(ids.astype(np.uint32)) if ids.size else b""
-                row_bytes["bp128d"] += (len(blob) + 2 * ids.size) * n_senders
+            for i in range(rows):
+                # grid-row consensus: every rank in the row packs at the
+                # bucket of the row's worst (sender, destination) stream
+                bkt = max(
+                    _host_bucket(row_ladder, streams.get((i, jc, i * cols + k), empty))
+                    for jc in range(cols) for k in range(cols)
+                )
+                unit = _bucket_wire(row_ladder, bkt)[1]
+                for k in range(cols):
+                    q = i * cols + k
+                    row_bytes["raw"] += dense.wire_bytes * n_senders
+                    row_bytes["bitmap"] += dense.wire_bytes * n_senders  # parents stay dense
+                    row_bytes["packed"] += unit * n_senders
+                    for jc in range(cols):
+                        if jc == k:
+                            continue  # own subchunk never crosses a link
+                        ids = streams.get((i, jc, q), empty)
+                        blob = bp.encode(ids.astype(np.uint32)) if ids.size else b""
+                        row_bytes["bp128d"] += len(blob) + 2 * ids.size
         else:
             # per-chunk cost is density-independent, so no per-rank split is
             # needed: baseline stays uncompressed (dense candidates + raw-id
@@ -153,6 +349,34 @@ def simulate_zones(
                 row_bytes[f] = (bu_wire + bitmap.wire_bytes) * n_senders * n_chunks
         for f in FORMATS:
             stats.add("rowCommunication", f, "all-to-all", row_bytes[f])
+
+        # --- butterfly plan: staged replay of the same candidate streams —
+        # per-stage union-merge + re-bucket, plus the staged unreached
+        # gather at pull levels
+        btfly_bytes = 0
+        btfly_stages = []
+        for i in range(rows):
+            row_streams = {
+                (jc, k): streams.get((i, jc, i * cols + k), empty)
+                for jc in range(cols) for k in range(cols)
+            }
+            t, slog = _btfly_row_stage_replay(row_streams, cols, bt_ladder, bt_floor)
+            btfly_bytes += t
+            for entry in slog:
+                btfly_stages.append({"grid_row": i, **entry})
+            if bu:
+                # padding vertices (>= g.n) stay unreached on device and ride
+                # the wire too — include them so buckets match the device
+                un_ids = [
+                    np.nonzero((level_pad[q * s:(q + 1) * s] > lv)
+                               | (level_pad[q * s:(q + 1) * s] < 0))[0]
+                    for q in range(i * cols, (i + 1) * cols)
+                ]
+                t, slog = _btfly_unreached_stage_replay(un_ids, s, cols, ladder)
+                btfly_bytes += t
+                for entry in slog:
+                    btfly_stages.append({"grid_row": i, "zone": "unreached", **entry})
+
         directions.append(
             {
                 "level": lv,
@@ -161,6 +385,8 @@ def simulate_zones(
                 "density": frontier.size / part.n,
                 "candidates": int(cand.size),
                 "row_bytes_packed": row_bytes["packed"],
+                "row_bytes_btfly": btfly_bytes,
+                "btfly_stages": btfly_stages,
             }
         )
         # next level's direction from the new frontier's count — the same
@@ -186,44 +412,57 @@ def run(scale: int = 17, rows: int = 4, cols: int = 4):
         )
         policy_levels[policy] = directions
         zones = stats.per_phase_fmt()
+
+        def add_row(zone, fmt, b, raw, plan="alltoall"):
+            red = 100.0 * (1 - b / raw) if raw else 0.0
+            speedup = pol.modeled_speedup(
+                max(raw / 4, 1), ratio=max(raw / max(b, 1), 1.0)
+            )
+            table.append(
+                {
+                    "policy": policy,
+                    "zone": zone,
+                    "format": fmt,
+                    "plan": plan,
+                    "bytes": b,
+                    "reduction_pct": red,
+                    "modeled_time_reduction_pct": 100.0 * (1 - 1 / speedup)
+                    if (fmt, plan) != ("raw", "alltoall")
+                    else 0.0,
+                }
+            )
+
         for zone in ZONES:
             fmts = zones[zone]
             raw = fmts["raw"]
             for fmt in FORMATS:
-                b = fmts[fmt]
-                red = 100.0 * (1 - b / raw) if raw else 0.0
-                speedup = pol.modeled_speedup(
-                    max(raw / 4, 1), ratio=max(raw / max(b, 1), 1.0)
-                )
-                table.append(
-                    {
-                        "policy": policy,
-                        "zone": zone,
-                        "format": fmt,
-                        "bytes": b,
-                        "reduction_pct": red,
-                        "modeled_time_reduction_pct": 100.0 * (1 - 1 / speedup)
-                        if fmt != "raw"
-                        else 0.0,
-                    }
-                )
+                add_row(zone, fmt, fmts[fmt], raw)
+        # the butterfly plan re-compresses per stage; only the row phase
+        # differs from the direct plan (column/broadcast zones are shared)
+        add_row(
+            "rowCommunication",
+            "packed",
+            sum(d["row_bytes_btfly"] for d in directions),
+            zones["rowCommunication"]["raw"],
+            plan="btfly",
+        )
     return table, policy_levels
 
 
 def print_table(table: list[dict]) -> None:
-    print("policy,zone,format,bytes,data_reduction_pct,modeled_time_reduction_pct")
+    print("policy,zone,format,plan,bytes,data_reduction_pct,modeled_time_reduction_pct")
     for r in table:
-        print(f"{r['policy']},{r['zone']},{r['format']},{r['bytes']},"
+        print(f"{r['policy']},{r['zone']},{r['format']},{r['plan']},{r['bytes']},"
               f"{r['reduction_pct']:.2f},{r['modeled_time_reduction_pct']:.2f}")
 
 
 def print_levels(policy_levels: dict[str, list[dict]]) -> None:
-    print("# per-level direction + packed row bytes")
-    print("policy,level,direction,frontier,density,row_bytes_packed")
+    print("# per-level direction + packed row bytes (direct and butterfly)")
+    print("policy,level,direction,frontier,density,row_bytes_packed,row_bytes_btfly")
     for policy, directions in policy_levels.items():
         for d in directions:
             print(f"{policy},{d['level']},{d['direction']},{d['frontier']},"
-                  f"{d['density']:.4f},{d['row_bytes_packed']}")
+                  f"{d['density']:.4f},{d['row_bytes_packed']},{d['row_bytes_btfly']}")
 
 
 def main() -> None:

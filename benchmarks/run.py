@@ -24,7 +24,12 @@ def write_bench_comm(
 ) -> None:
     from benchmarks import bfs_comm
 
+    from repro.core import csr as csrmod
+
     scale, rows, cols = _bench_comm_size(full)
+    # the padding rule partition_2d applies (1024-multiple chunks): the
+    # staged-byte-model check recomputes wire geometry from (n, chunk)
+    n, chunk = csrmod.padded_geometry(1 << scale, rows, cols)
     if table is None:
         table, policy_levels = bfs_comm.run(scale=scale, rows=rows, cols=cols)
     doc = {
@@ -32,7 +37,10 @@ def write_bench_comm(
         "scale": scale,
         "rows": rows,
         "cols": cols,
+        "chunk": chunk,  # the staged byte model needs s and n
+        "n": n,
         "policies": list(bfs_comm.POLICIES),
+        "plans": list(bfs_comm.PLANS),
         "table": table,
         # per-policy per-level direction + packed row bytes: makes the
         # direction-opt vs top_down wire saving visible level by level

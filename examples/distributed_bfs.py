@@ -42,7 +42,7 @@ def main() -> None:
           f"chunk s={bg.part.chunk:,}, e_cap={bg.e_cap:,}")
 
     ref = validate.reference_bfs(g, root)
-    for mode in ("raw", "bitmap", "auto"):
+    for mode in ("raw", "bitmap", "auto", "btfly"):
         cfg = dbfs.DistBFSConfig(mode=mode, policy=args.policy)
         fn = dbfs.build_bfs(mesh, bg, cfg)
         src_l, dst_l = dbfs.shard_blocked(mesh, bg, cfg)

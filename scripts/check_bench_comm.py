@@ -1,0 +1,79 @@
+"""Verify BENCH_comm.json's staged butterfly volumes against the static
+byte model.
+
+Usage: PYTHONPATH=src python scripts/check_bench_comm.py [BENCH_comm.json]
+
+Every ``btfly_stages`` entry the host replay logged must satisfy
+
+    bytes == senders * subchunks * stage_unit_bytes(s, n, fmt)
+
+up to one packing chunk of padding per subchunk — the stage formats are
+static-geometry wire formats, so any larger disagreement means the replay
+and the device wire plan have diverged (the exact contamination the
+butterfly-vs-alltoall comparison must not carry).  Also re-checks that the
+per-level ``row_bytes_btfly`` totals equal the sum of their stages and that
+the table's btfly row equals the per-level sum.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+from repro.comm import butterfly
+
+#: slack per subchunk: one 1024-value packing chunk of u32 words
+PAD_BYTES = 4 * 1024
+
+
+def check(doc: dict) -> int:
+    s, n = doc["chunk"], doc["n"]
+    n_checked = 0
+    for policy, levels in doc["policy_levels"].items():
+        total = 0
+        for d in levels:
+            level_sum = 0
+            for e in d["btfly_stages"]:
+                unit = butterfly.stage_unit_bytes(
+                    s, n, e["fmt"], zone=e.get("zone", "row")
+                )
+                model = e["senders"] * e["subchunks"] * unit
+                tol = e["senders"] * e["subchunks"] * PAD_BYTES
+                if abs(e["bytes"] - model) > tol:
+                    raise SystemExit(
+                        f"{policy} level {d['level']} stage {e['stage']}: "
+                        f"replayed {e['bytes']} B vs model {model} B "
+                        f"(fmt={e['fmt']}, tol={tol})"
+                    )
+                level_sum += e["bytes"]
+                n_checked += 1
+            if level_sum != d["row_bytes_btfly"]:
+                raise SystemExit(
+                    f"{policy} level {d['level']}: stage sum {level_sum} != "
+                    f"row_bytes_btfly {d['row_bytes_btfly']}"
+                )
+            total += level_sum
+        table_rows = [
+            r for r in doc["table"]
+            if r["policy"] == policy and r.get("plan") == "btfly"
+        ]
+        assert table_rows, f"no btfly table row for policy {policy}"
+        if table_rows[0]["bytes"] != total:
+            raise SystemExit(
+                f"{policy}: table btfly bytes {table_rows[0]['bytes']} != "
+                f"staged sum {total}"
+            )
+    return n_checked
+
+
+def main() -> None:
+    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_comm.json"
+    with open(path) as f:
+        doc = json.load(f)
+    assert "btfly" in doc.get("plans", ()), "BENCH_comm.json lacks the btfly plan"
+    n = check(doc)
+    print(f"BENCH BTFLY BYTE MODEL OK ({n} stage entries checked)")
+
+
+if __name__ == "__main__":
+    main()

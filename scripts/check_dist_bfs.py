@@ -27,8 +27,9 @@ def main() -> None:
     ref_levels = validate.reference_bfs(g, root=0)
     # wire modes (top_down) plus every traversal policy on the adaptive
     # plan; the low alpha forces direction_opt through its pull branch
-    combos = [(m, "top_down", None) for m in ("raw", "bitmap", "auto")]
-    combos += [("auto", p, 0.01) for p in ("bottom_up", "direction_opt")]
+    combos = [(m, "top_down", None) for m in ("raw", "bitmap", "auto", "btfly")]
+    combos += [(m, p, 0.01) for m in ("auto", "btfly")
+               for p in ("bottom_up", "direction_opt")]
     for mode, policy, alpha in combos:
         cfg = dbfs.DistBFSConfig(mode=mode, policy=policy, alpha=alpha)
         fn = dbfs.build_bfs(mesh, bg, cfg)

@@ -15,8 +15,11 @@ threshold).  This subsystem owns that choice end to end:
   entries correspond 1:1 with the collective ops in lowered HLO.
 * :mod:`repro.comm.registry` — the unified wire-plan + host-codec factory
   (absorbs the old compression registry).
-* :mod:`repro.comm.collectives` — the three collective paths (BFS column,
-  BFS row, int8 gradient all-reduce) rebuilt on the engine.
+* :mod:`repro.comm.collectives` — the collective paths (BFS column, BFS
+  row, butterfly stage exchanges, int8 gradient all-reduce) rebuilt on the
+  engine.
+* :mod:`repro.comm.butterfly` — the 'btfly' wire plan: log2(C)-stage
+  merge-and-recompress row/unreached exchanges (ButterFly BFS).
 
 Layering: core/distributed_bfs -> comm -> kernels (bitpack/quant).
 ``repro.compression`` keeps the host-side variable-length codecs and the
@@ -48,5 +51,6 @@ from repro.comm.collectives import (  # noqa: F401
     alltoall_bitmap_min,
     alltoall_min_candidates,
 )
+from repro.comm import butterfly  # noqa: F401
 from repro.comm import registry  # noqa: F401
 from repro.compression.threshold import ThresholdPolicy  # noqa: F401

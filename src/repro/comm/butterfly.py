@@ -1,0 +1,326 @@
+"""Butterfly row exchange: log2(C)-stage merge-and-recompress wire plan.
+
+ButterFly BFS (arXiv:2103.13577) replaces the row phase's direct ALLTOALLV —
+whose per-rank cost grows with the grid width C — with a butterfly: each of
+log2(C) stages exchanges with ONE partner (``ppermute``) and *re-compresses
+the merged candidate stream* before the next hop, so the paper's adaptive
+wire formats (PFOR16 id streams, bitmap + packed parents) are applied at
+every stage instead of once.  Mapped onto the static-shape engine:
+
+* **reduce-scatter butterfly** (push and pull row phases): the (C, s)
+  candidate matrix is folded into a (P, slots, s) leaf state (P = largest
+  power of two <= C); stage t pairs rank j with ``j ^ 2^t`` and moves the
+  ``P / 2^(t+1)`` leaf rows whose destination bit t matches the partner,
+  min-merging received rows into the kept half.  After all stages rank j
+  holds exactly its own fully-reduced subchunk.
+* **recursive-doubling butterfly** (the bottom-up unreached all-gather):
+  the same pairing in the opposite direction — stage t forwards the
+  2^t-chunk block accumulated so far, OR/concatenating the partner's block,
+  until every rank holds the whole grid-row membership.
+* **non-power-of-two C — folded first stage**: the ``extra = C - P``
+  overhang ranks ppermute their entire candidate state onto ranks
+  ``0..extra-1`` before stage 0 (each low rank's leaf gains a second slot
+  for the overhang destination), idle through the power-of-two stages, and
+  receive their reduced subchunk back in a final unfold ppermute.
+
+Each stage records its bytes under its own CommStats zone
+(``bfs/row[btfly:t]``, ``[btfly:fold]``, ``[btfly:unfold]``) so the ledger
+reconciles 1:1 with the ``collective-permute`` ops in the lowered HLO, and
+the host benchmark can replay the staged volumes against
+:func:`stage_unit_bytes` — the static byte model of one subchunk on the
+wire at each stage.
+
+Because merged streams lose sender identity, the parent payload must carry
+GLOBAL ids: :func:`row_wire` sizes the ladder's payload class from the full
+vertex count (not the column-slice width the direct all-to-all localizes
+to) and uses found-bitmap + packed-global-parent as the dense floor
+whenever that class stays below 32 bits.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm import collectives as cc
+from repro.comm.engine import AdaptiveExchange
+from repro.comm.formats import INF, BitmapFormat, BitmapParentFormat, DenseFormat
+from repro.comm.ladder import BucketLadder
+from repro.kernels.bitpack.ref import B_CLASSES
+
+
+def width_class(n: int) -> int:
+    """Smallest bit-packing class covering ids in [0, n)."""
+    need = max((n - 1).bit_length(), 1)
+    for b in B_CLASSES:
+        if b >= need:
+            return b
+    return 32
+
+
+@dataclasses.dataclass(frozen=True)
+class ButterflySchedule:
+    """Static stage plan of the butterfly over ``c`` ranks.
+
+    ``p`` is the largest power of two <= c; the ``extra = c - p`` overhang
+    ranks fold onto ranks ``0..extra-1`` (their leaf gains a second slot)
+    before the log2(p) pairwise stages, and unfold afterwards.
+    """
+
+    c: int
+
+    @property
+    def p(self) -> int:
+        return 1 << (self.c.bit_length() - 1)
+
+    @property
+    def extra(self) -> int:
+        return self.c - self.p
+
+    @property
+    def slots(self) -> int:
+        return 2 if self.extra else 1
+
+    @property
+    def n_stages(self) -> int:
+        return self.p.bit_length() - 1  # log2(p)
+
+    def stage_perm(self, t: int) -> list[tuple[int, int]]:
+        """Pairwise swap of stage ``t`` (overhang ranks idle)."""
+        return [(r, r ^ (1 << t)) for r in range(self.p)]
+
+    def stage_blocks(self, t: int) -> int:
+        """Leaf rows exchanged at stage ``t`` (times ``slots`` subchunks)."""
+        return self.p >> (t + 1)
+
+    def fold_perm(self) -> list[tuple[int, int]]:
+        return [(self.p + e, e) for e in range(self.extra)]
+
+    def unfold_perm(self) -> list[tuple[int, int]]:
+        return [(e, self.p + e) for e in range(self.extra)]
+
+    def leaf_of_chunk(self, q: int) -> tuple[int, int]:
+        """Grid-row chunk index -> (leaf row, slot)."""
+        return (q, 0) if q < self.p else (q - self.p, 1)
+
+
+def row_wire(
+    s: int, n: int, policy=None
+) -> tuple[BucketLadder, BitmapParentFormat | DenseFormat]:
+    """Ladder + dense floor of the butterfly row stages (shared with the
+    host-replay benchmark so device and bench model the same wire).
+
+    The payload class must cover GLOBAL parent ids in [0, n): a butterfly
+    stage merges streams from several origin columns, so the receiver can
+    no longer rebuild global ids from a sender index the way the direct
+    exchanges do.  When that class stays below 32 bits the dense floor is
+    the found-bitmap + packed-parent format (s/32 + s*w/32 words — the
+    "bitmap OR-merge" of dense stages); at 32 bits it degenerates to the
+    dense int32 vector.
+    """
+    w = width_class(n)
+    floor: BitmapParentFormat | DenseFormat
+    if w < 32:
+        floor = BitmapParentFormat(s, w)
+        floor_words = floor.data_words
+    else:
+        floor = DenseFormat(s)
+        floor_words = s
+    ladder = BucketLadder.default(
+        s, floor_words=floor_words, payload_width=w, policy=policy
+    )
+    return ladder, floor
+
+
+def unreached_wire(s: int, policy=None) -> tuple[BucketLadder, BitmapFormat]:
+    """Ladder + bitmap floor of the staged unreached all-gather."""
+    return BucketLadder.default(s, policy=policy), BitmapFormat(s)
+
+
+def stage_unit_bytes(
+    s: int, n: int, fmt_name: str, zone: str = "row", policy=None
+) -> int:
+    """Static byte model: wire bytes of ONE subchunk under ``fmt_name``.
+
+    This is what the CI parity check recomputes against the staged volumes
+    the host replay wrote into BENCH_comm.json — every stage's bytes must
+    equal ``senders * subchunks * stage_unit_bytes(...)`` of the format the
+    consensus picked there, up to packing padding.  ``zone`` selects the
+    wire ("row" or "unreached"): the same ``pfor16[...]`` name prices
+    differently on the two (the row stream carries the parent payload).
+    """
+    if zone == "row":
+        ladder, floor = row_wire(s, n, policy=policy)
+    elif zone == "unreached":
+        ladder, floor = unreached_wire(s, policy=policy)
+    else:
+        raise KeyError(f"unknown butterfly zone {zone!r}")
+    if fmt_name == floor.name:
+        return floor.wire_bytes
+    for fmt in ladder.formats():
+        if fmt.name == fmt_name:
+            return fmt.wire_bytes
+    raise KeyError(f"unknown {zone} stage format {fmt_name!r}")
+
+
+# ---------------------------------------------------------------------------
+# reduce-scatter butterfly: the staged row phase (push and pull)
+# ---------------------------------------------------------------------------
+
+
+def build_row_exchange(
+    s: int,
+    axis,
+    group_size: int,
+    n_c: int,
+    *,
+    to_global: bool = False,
+    policy=None,
+    stats=None,
+    phase: str = "bfs/row",
+):
+    """Build ``fn(prop (c, s) int32) -> (s,) int32`` — the staged analog of
+    the direct row ALLTOALLV + min.
+
+    ``to_global`` globalizes column-local pull candidates (``j*n_c + local``)
+    before the first stage; the push path's candidates are global already.
+    """
+    c = group_size
+    n = n_c * c
+    sched = ButterflySchedule(c)
+    ladder, floor = row_wire(s, n, policy=policy)
+    p, extra, slots = sched.p, sched.extra, sched.slots
+
+    def exchange(block, perm, gate, zone):
+        ex = AdaptiveExchange(zone, axis, c, ladder, stats)
+        return cc.ppermute_min_block(ex, block, perm, ladder, floor, gate=gate)
+
+    def run(prop: jax.Array) -> jax.Array:
+        assert prop.shape == (c, s), (prop.shape, c, s)
+        j = jax.lax.axis_index(axis)
+        if to_global:
+            prop = jnp.where(prop < INF, j * n_c + prop, INF)
+        if c == 1:
+            return prop[0]
+        jv = j & (p - 1)
+        # leaf state: row k slot 0 = destination chunk k, slot 1 = chunk p+k
+        main = prop[:p]
+        if extra:
+            over = jnp.concatenate(
+                [prop[p:], jnp.full((p - extra, s), INF, jnp.int32)], axis=0
+            )
+            state = jnp.stack([main, over], axis=1)  # (p, 2, s)
+            # folded first stage: overhang ranks merge their whole candidate
+            # state onto ranks 0..extra-1
+            recv = exchange(
+                state.reshape(p * slots, s),
+                sched.fold_perm(),
+                gate=j >= p,
+                zone=f"{phase}[btfly:fold]",
+            ).reshape(p, slots, s)
+            state = jnp.minimum(state, jnp.where(j < extra, recv, INF))
+        else:
+            state = main[:, None, :]  # (p, 1, s)
+
+        for t in range(sched.n_stages):
+            m = 1 << t
+            nblk = sched.stage_blocks(t)
+            send_base = (jv ^ m) & (2 * m - 1)
+            keep_base = jv & (2 * m - 1)
+            idx_send = send_base + 2 * m * jnp.arange(nblk, dtype=jnp.int32)
+            idx_keep = keep_base + 2 * m * jnp.arange(nblk, dtype=jnp.int32)
+            recv = exchange(
+                state[idx_send].reshape(nblk * slots, s),
+                sched.stage_perm(t),
+                gate=j < p,
+                zone=f"{phase}[btfly:{t}]",
+            ).reshape(nblk, slots, s)
+            state = state.at[idx_keep].min(recv)
+
+        row = jnp.take(state, jv, axis=0)  # (slots, s) — my merged leaf
+        own = row[0]
+        if extra:
+            recv = exchange(
+                row[1][None, :],
+                sched.unfold_perm(),
+                gate=j < extra,
+                zone=f"{phase}[btfly:unfold]",
+            )
+            own = jnp.where(j >= p, recv[0], own)
+        return own
+
+    return run
+
+
+# ---------------------------------------------------------------------------
+# recursive-doubling butterfly: the staged unreached all-gather
+# ---------------------------------------------------------------------------
+
+
+def build_unreached_gather(
+    s: int,
+    axis,
+    group_size: int,
+    *,
+    policy=None,
+    stats=None,
+    phase: str = "bfs/unreached",
+):
+    """Build ``fn(bits (s,) bool) -> (c*s,) bool`` — staged membership
+    all-gather over the grid row (bottom-up's unreached probe)."""
+    c = group_size
+    sched = ButterflySchedule(c)
+    ladder, _ = unreached_wire(s, policy=policy)
+    p, extra, slots = sched.p, sched.extra, sched.slots
+
+    def exchange(block, perm, gate, zone):
+        ex = AdaptiveExchange(zone, axis, c, ladder, stats)
+        return cc.ppermute_membership_block(ex, block, perm, ladder, gate=gate)
+
+    def run(bits: jax.Array) -> jax.Array:
+        assert bits.shape == (s,), (bits.shape, s)
+        if c == 1:
+            return bits
+        j = jax.lax.axis_index(axis)
+        jv = j & (p - 1)
+        state = jnp.zeros((p, slots, s), bool)
+        state = state.at[jv, 0].set(jnp.where(j < p, bits, False))
+        if extra:
+            recv = exchange(
+                bits[None, :], sched.fold_perm(), gate=j >= p,
+                zone=f"{phase}[btfly:fold]",
+            )
+            state = state.at[jv, 1].set(jnp.where(j < extra, recv[0], False))
+
+        for t in range(sched.n_stages):
+            blk = 1 << t
+            start = (jv >> t) << t
+            idx_mine = start + jnp.arange(blk, dtype=jnp.int32)
+            idx_partner = (start ^ blk) + jnp.arange(blk, dtype=jnp.int32)
+            recv = exchange(
+                state[idx_mine].reshape(blk * slots, s),
+                sched.stage_perm(t),
+                gate=j < p,
+                zone=f"{phase}[btfly:{t}]",
+            ).reshape(blk, slots, s)
+            state = state.at[idx_partner].set(jnp.where(j < p, recv, False))
+
+        if extra:
+            # overhang ranks need the whole gathered row slice back
+            recv = exchange(
+                state.reshape(p * slots, s),
+                sched.unfold_perm(),
+                gate=j < extra,
+                zone=f"{phase}[btfly:unfold]",
+            ).reshape(p, slots, s)
+            state = jnp.where(j >= p, recv, state)
+            flat = jnp.concatenate(
+                [state[:, 0, :].reshape(-1), state[:extra, 1, :].reshape(-1)]
+            )
+        else:
+            flat = state[:, 0, :].reshape(-1)
+        return flat  # (c*s,), chunk q of the row at [q*s:(q+1)*s]
+
+    return run

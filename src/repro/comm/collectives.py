@@ -6,9 +6,12 @@ and the row phase (ALLTOALLV + compress) both dispatch through
 wire is one of the :mod:`repro.comm.formats` chosen per communicator group
 by the bucket ladder.  The bottom-up (pull) traversal direction swaps the
 row id-stream ALLTOALLV for :func:`alltoall_bitmap_min` — a found-bitmap +
-bit-packed-parent exchange whose cost is density-independent.  The int8
-gradient all-reduce (beyond-paper) is the degenerate single-format case of
-the same engine.
+bit-packed-parent exchange whose cost is density-independent.  The
+butterfly wire plan's staged rounds (:mod:`repro.comm.butterfly`) go
+through :func:`ppermute_min_block` / :func:`ppermute_membership_block` —
+one adaptive partner-exchange per stage, re-bucketed on the merged stream.
+The int8 gradient all-reduce (beyond-paper) is the degenerate
+single-format case of the same engine.
 
 Every collective reports its bytes through :class:`repro.comm.stats.CommStats`.
 """
@@ -129,6 +132,7 @@ def alltoall_min_candidates(
     *,
     stats: CommStats | None = None,
     phase: str = "bfs/row",
+    n_c: int | None = None,
 ):
     """Adaptive all-to-all + min-reduce of candidate parents (row phase).
 
@@ -137,6 +141,15 @@ def alltoall_min_candidates(
     subchunk addressed to this rank.  Ids are delta+patched-packed; parent
     payloads are bit-packed at the ladder's stored ``payload_width`` class
     and ride in the same wire words as the ids.
+
+    ``n_c`` (the column-slice width) localizes the payload: the sender's
+    candidates are global ids ``j * n_c + src_l``, but ``payload_width`` only
+    covers the column-local offset — packing the global value would silently
+    truncate its high bits whenever ``bit_length(n-1)`` exceeds the class
+    that covers ``n_c``.  The sender therefore strips its own ``j * n_c``
+    base before packing and the receiver re-adds it per received row (the
+    all-to-all row index IS the sender's column), which is lossless at any
+    grid width.
     """
     s = ladder.s
     c = group_size
@@ -153,27 +166,31 @@ def alltoall_min_candidates(
     gaps = jax.vmap(bpref.gaps_from_sorted)(ids, counts)
     exc_counts = jnp.sum((gaps >> 16) > 0, axis=1)
     my_bucket = jnp.max(jax.vmap(ladder.bucket_for)(counts, exc_counts))
+    base = 0 if n_c is None else jax.lax.axis_index(axis) * n_c
 
     def sparse_branch(fmt: IdStreamFormat):
         cap = fmt.spec.cap
 
         def run(_):
             def pack_one(ids_d, count_d, prop_d):
-                par = prop_d[jnp.clip(ids_d[:cap], 0, s - 1)]
+                par = prop_d[jnp.clip(ids_d[:cap], 0, s - 1)] - base
                 return fmt.pack(ids_d, count_d, payload=par)
 
             words, meta = jax.vmap(pack_one)(ids, counts, prop)
             r_words = ex.all_to_all(words, fmt=fmt.name).reshape(c, fmt.data_words)
             r_meta = ex.all_to_all(meta, fmt=fmt.name, part="meta").reshape(c, 2)
 
-            def unpack_one(w, m):
+            def unpack_one(w, m, sender):
                 u_ids, u_count, par = fmt.unpack(w, m, fill=s)
                 valid = jnp.arange(cap) < u_count
                 seg = jnp.where(valid, u_ids[:cap], s)
-                val = jnp.where(valid, par, INF)
+                glob = par if n_c is None else par + sender * n_c
+                val = jnp.where(valid, glob, INF)
                 return seg, val
 
-            segs, vals = jax.vmap(unpack_one)(r_words, r_meta)
+            segs, vals = jax.vmap(unpack_one)(
+                r_words, r_meta, jnp.arange(c, dtype=jnp.int32)
+            )
             red = jax.ops.segment_min(
                 vals.reshape(-1), segs.reshape(-1), num_segments=s + 1
             )
@@ -207,6 +224,139 @@ def alltoall_bitmap_min(
     sender = jnp.arange(c, dtype=jnp.int32)[:, None]  # grid-column of origin
     glob = jnp.where(bits, sender * n_c + local, INF)
     return jnp.min(glob, axis=0).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# butterfly stages: adaptive merge-exchange of subchunk blocks (ppermute)
+# ---------------------------------------------------------------------------
+
+
+def ppermute_min_block(
+    ex: AdaptiveExchange,
+    block: jax.Array,
+    perm,
+    ladder: BucketLadder,
+    floor_fmt,
+    *,
+    gate: jax.Array,
+):
+    """One butterfly stage: exchange a block of candidate subchunks.
+
+    ``block``: (nb, s) int32 global candidate parents (INF = none) — the
+    subchunks this rank sends to its stage partner under ``perm``.  Returns
+    the partner's (nb, s) block, reconstructed dense so the caller can
+    min-merge it (ButterFly BFS: the merged stream is re-bucketed by the
+    NEXT stage's call, so compression applies at every hop).
+
+    The wire representation is chosen per stage by the ladder: sparse
+    delta+PFOR16 id streams carrying the parent payload at the ladder's
+    ``payload_width`` (which must cover GLOBAL ids — merged streams lose
+    sender identity, so column-local offsets cannot ride a butterfly), with
+    ``floor_fmt`` (found-bitmap + packed parents, or dense int32) as the
+    dense floor.  ``gate`` masks the consensus contribution of ranks that do
+    not send at this stage (folded ranks), so their stale state never
+    inflates the group's bucket choice.
+    """
+    nb, s = block.shape
+    bits = block < INF
+    ids, counts = jax.vmap(lambda b: bp.compact_ids(b, s, fill=s))(bits)
+    gaps = jax.vmap(bpref.gaps_from_sorted)(ids, counts)
+    exc_counts = jnp.sum((gaps >> 16) > 0, axis=1)
+    if ladder.specs:
+        my_bucket = jnp.max(jax.vmap(ladder.bucket_for)(counts, exc_counts))
+        my_bucket = jnp.where(gate, my_bucket, 0)
+    else:
+        my_bucket = None
+
+    def sparse_branch(fmt: IdStreamFormat):
+        cap = fmt.spec.cap
+
+        def run(_):
+            def pack_one(ids_d, count_d, block_d):
+                par = block_d[jnp.clip(ids_d[:cap], 0, s - 1)]
+                return fmt.pack(ids_d, count_d, payload=par)
+
+            words, meta = jax.vmap(pack_one)(ids, counts, block)
+            r_words = ex.ppermute(words, perm, fmt=fmt.name)
+            r_meta = ex.ppermute(meta, perm, fmt=fmt.name, part="meta")
+
+            def unpack_one(w, m):
+                u_ids, u_count, par = fmt.unpack(w, m, fill=s)
+                valid = jnp.arange(cap) < u_count
+                seg = jnp.where(valid, u_ids[:cap], s)
+                val = jnp.where(valid, par, INF)
+                return jnp.full((s + 1,), INF, jnp.int32).at[seg].min(val)[:s]
+
+            return jax.vmap(unpack_one)(r_words, r_meta)
+
+        return run
+
+    def floor_branch(_):
+        if isinstance(floor_fmt, BitmapParentFormat):
+            words = jax.vmap(floor_fmt.pack)(block)
+            recv = ex.ppermute(words, perm, fmt=floor_fmt.name)
+            f_bits, par = jax.vmap(floor_fmt.unpack)(recv)
+            return jnp.where(f_bits, par, INF)
+        return ex.ppermute(block, perm, fmt=floor_fmt.name)
+
+    branches = [sparse_branch(f) for f in ladder.formats()] + [floor_branch]
+    return ex.dispatch(my_bucket, branches)
+
+
+def ppermute_membership_block(
+    ex: AdaptiveExchange,
+    block: jax.Array,
+    perm,
+    ladder: BucketLadder,
+    *,
+    gate: jax.Array,
+):
+    """One butterfly all-gather stage: exchange a block of membership chunks.
+
+    ``block``: (nb, s) bool — the chunks this rank forwards under ``perm``.
+    Returns the partner's (nb, s) bool block.  Sparse stages travel as
+    delta+PFOR16 id streams per chunk, dense stages as width-1 bitmaps (the
+    doubling block keeps chunk identity, so the merge is a plain
+    concatenation/OR into the receiver's state).
+    """
+    nb, s = block.shape
+    ids, counts = jax.vmap(lambda b: bp.compact_ids(b, s, fill=s))(
+        block
+    )
+    gaps = jax.vmap(bpref.gaps_from_sorted)(ids, counts)
+    exc_counts = jnp.sum((gaps >> 16) > 0, axis=1)
+    if ladder.specs:
+        my_bucket = jnp.max(jax.vmap(ladder.bucket_for)(counts, exc_counts))
+        my_bucket = jnp.where(gate, my_bucket, 0)
+    else:
+        my_bucket = None
+
+    def sparse_branch(fmt: IdStreamFormat):
+        cap = fmt.spec.cap
+
+        def run(_):
+            words, meta = jax.vmap(fmt.pack)(ids, counts)
+            r_words = ex.ppermute(words, perm, fmt=fmt.name)
+            r_meta = ex.ppermute(meta, perm, fmt=fmt.name, part="meta")
+
+            def unpack_one(w, m):
+                u_ids, u_count, _ = fmt.unpack(w, m, fill=s)
+                valid = jnp.arange(cap) < u_count
+                seg = jnp.where(valid, u_ids[:cap], s)
+                return jnp.zeros((s + 1,), bool).at[seg].set(True)[:s]
+
+            return jax.vmap(unpack_one)(r_words, r_meta)
+
+        return run
+
+    def bitmap_branch(_):
+        fmt = BitmapFormat(s)
+        words = jax.vmap(fmt.pack)(block)
+        recv = ex.ppermute(words, perm, fmt=fmt.name)
+        return jax.vmap(fmt.unpack)(recv)
+
+    branches = [sparse_branch(f) for f in ladder.formats()] + [bitmap_branch]
+    return ex.dispatch(my_bucket, branches)
 
 
 # ---------------------------------------------------------------------------

@@ -16,6 +16,13 @@ byte accounting:
   result-shape bytes of the op they emit, so CommStats entries correspond
   1:1 with the collective ops the dry-run roofline parses out of HLO.
 
+Every record carries two byte counts: ``nbytes`` (result-shape bytes, the
+HLO-parity convention ``compare_comm_stats`` checks) and ``moved_bytes``
+(what actually crosses a link).  They differ exactly where the HLO operand
+over-counts traffic: identity ``ppermute`` pairs (the 2D transpose always
+contains self-sends), the own-chunk share of a gather/all-to-all, and the
+ring all-reduce's 2(g-1)/g volume.
+
 Recording happens at trace time; every entry's key is static, so
 retracing is idempotent (see :mod:`repro.comm.stats`).
 """
@@ -28,7 +35,7 @@ from typing import Any, Callable, Sequence
 import jax
 
 from repro.comm.ladder import BucketLadder
-from repro.comm.stats import CommStats
+from repro.comm.stats import CommStats, aval_bytes
 
 CONSENSUS = "consensus"  # fmt label of the bucket-choice all-reduce
 
@@ -45,33 +52,43 @@ class AdaptiveExchange:
 
     # -- recording collective primitives ------------------------------------
 
-    def _rec(self, fmt: str, kind: str, part: str, out: jax.Array) -> None:
+    def _rec(self, fmt: str, kind: str, part: str, out: jax.Array,
+             moved: int | None = None) -> None:
         if self.stats is not None:
-            self.stats.record_aval(self.phase, fmt, kind, part, out)
+            self.stats.record_aval(self.phase, fmt, kind, part, out,
+                                   moved_bytes=moved)
+
+    def _peer_share(self, out: jax.Array) -> int:
+        """Result bytes minus the own chunk (gathers/all-to-alls keep 1/g)."""
+        return aval_bytes(out) * (self.group_size - 1) // self.group_size
 
     def all_gather(self, x: jax.Array, *, fmt: str, part: str = "words") -> jax.Array:
         out = jax.lax.all_gather(x, self.axis, tiled=True)
-        self._rec(fmt, "all-gather", part, out)
+        self._rec(fmt, "all-gather", part, out, moved=self._peer_share(out))
         return out
 
     def all_to_all(self, x: jax.Array, *, fmt: str, part: str = "words") -> jax.Array:
         out = jax.lax.all_to_all(x, self.axis, 0, 0, tiled=True)
-        self._rec(fmt, "all-to-all", part, out)
+        self._rec(fmt, "all-to-all", part, out, moved=self._peer_share(out))
         return out
 
     def pmax(self, x: jax.Array, *, fmt: str = CONSENSUS, part: str = "bucket") -> jax.Array:
         out = jax.lax.pmax(x, self.axis)
-        self._rec(fmt, "all-reduce", part, out)
+        self._rec(fmt, "all-reduce", part, out, moved=2 * self._peer_share(out))
         return out
 
     def psum(self, x: jax.Array, *, fmt: str, part: str = "value") -> jax.Array:
         out = jax.lax.psum(x, self.axis)
-        self._rec(fmt, "all-reduce", part, out)
+        self._rec(fmt, "all-reduce", part, out, moved=2 * self._peer_share(out))
         return out
 
     def ppermute(self, x: jax.Array, perm, *, fmt: str, part: str = "words") -> jax.Array:
         out = jax.lax.ppermute(x, self.axis, perm)
-        self._rec(fmt, "collective-permute", part, out)
+        # identity pairs (src == dst) emit full HLO operand bytes but move
+        # nothing; ranks outside ``perm`` receive zeros without traffic
+        n_moved = sum(1 for src, dst in perm if src != dst)
+        self._rec(fmt, "collective-permute", part, out,
+                  moved=aval_bytes(out) * n_moved // self.group_size)
         return out
 
     # -- adaptive dispatch ----------------------------------------------------

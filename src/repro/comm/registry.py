@@ -27,6 +27,7 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+from repro.comm import butterfly
 from repro.comm import collectives as cc
 from repro.comm.engine import AdaptiveExchange
 from repro.comm.formats import INF, BitmapParentFormat
@@ -80,8 +81,9 @@ class WirePlan:
 
     ``build_column(s, axis, group_size, *, policy, stats, phase)`` returns
     ``fn(bits (s,) bool) -> (group_size*s,) bool``; ``build_row(s, axis,
-    group_size, parent_width, *, policy, stats, phase)`` returns
-    ``fn(prop (group_size, s) i32) -> (s,) i32`` (min over senders).
+    group_size, n_c, parent_width, *, policy, stats, phase)`` returns
+    ``fn(prop (group_size, s) i32) -> (s,) i32`` (min over senders; ``n_c``
+    is the column-slice width, which sizes the packed parent payload).
 
     The bottom-up (pull) traversal direction adds two more exchange shapes:
     ``build_row_bu(s, axis, group_size, n_c, parent_width, ...)`` returns
@@ -139,22 +141,57 @@ def _auto_column(s, axis, group_size, *, policy=None, stats=None, phase="bfs/col
 
 
 def _dense_row(
-    s, axis, group_size, parent_width, *, policy=None, stats=None, phase="bfs/row"
+    s, axis, group_size, n_c, parent_width, *, policy=None, stats=None,
+    phase="bfs/row",
 ):
     ex = AdaptiveExchange(phase, axis, group_size, None, stats)
     return lambda prop: cc.alltoall_dense_min(ex, prop)
 
 
 def _auto_row(
-    s, axis, group_size, parent_width, *, policy=None, stats=None, phase="bfs/row"
+    s, axis, group_size, n_c, parent_width, *, policy=None, stats=None,
+    phase="bfs/row",
 ):
     # the row phase's dense fallback is a 32-bit candidate vector -> its own
-    # (deeper) ladder, with the parent payload priced into every bucket
+    # (deeper) ladder, with the parent payload priced into every bucket; the
+    # payload packs COLUMN-LOCAL offsets (the receiver re-globalizes from the
+    # all-to-all row index), so parent_width = class(n_c) is lossless
     ladder = BucketLadder.default(
         s, floor_words=s, payload_width=parent_width, policy=policy
     )
     return lambda prop: cc.alltoall_min_candidates(
-        prop, axis, ladder, group_size, stats=stats, phase=phase
+        prop, axis, ladder, group_size, stats=stats, phase=phase, n_c=n_c
+    )
+
+
+def _btfly_row(
+    s, axis, group_size, n_c, parent_width, *, policy=None, stats=None,
+    phase="bfs/row",
+):
+    """log2(C)-stage butterfly push row phase (merge + re-bucket per hop)."""
+    return butterfly.build_row_exchange(
+        s, axis, group_size, n_c, to_global=False,
+        policy=policy, stats=stats, phase=phase,
+    )
+
+
+def _btfly_row_bu(
+    s, axis, group_size, n_c, parent_width, *, policy=None, stats=None,
+    phase="bfs/row-pull",
+):
+    """Butterfly pull row phase: globalize column-local candidates, then the
+    same staged min-merge as the push direction."""
+    return butterfly.build_row_exchange(
+        s, axis, group_size, n_c, to_global=True,
+        policy=policy, stats=stats, phase=phase,
+    )
+
+
+def _btfly_unreached(
+    s, axis, group_size, *, policy=None, stats=None, phase="bfs/unreached"
+):
+    return butterfly.build_unreached_gather(
+        s, axis, group_size, policy=policy, stats=stats, phase=phase
     )
 
 
@@ -208,6 +245,11 @@ register_wire_plan(
 )
 register_wire_plan(
     WirePlan("auto", _auto_column, _auto_row, _bitmap_row_bu, _bitmap_unreached)
+)
+# ButterFly BFS (arXiv:2103.13577): adaptive column gather + log2(C)-stage
+# butterfly row/unreached exchanges that re-compress the merged stream per hop
+register_wire_plan(
+    WirePlan("btfly", _auto_column, _btfly_row, _btfly_row_bu, _btfly_unreached)
 )
 
 

@@ -51,6 +51,15 @@ class ExchangeRecord:
     part: str  # payload component: "words" | "meta" | "scales" | ...
     nbytes: int  # total result-shape bytes per device (all instances)
     count: int = 1  # op instances accumulated (informational)
+    #: bytes that actually cross a link, per device (self-sends and the own
+    #: chunk of a gather excluded; ring all-reduce counted at its true
+    #: 2(g-1)/g volume).  Defaults to nbytes when the caller has no better
+    #: model — HLO parity always uses nbytes, never this.
+    moved_bytes: int = -1
+
+    def __post_init__(self) -> None:
+        if self.moved_bytes < 0:
+            self.moved_bytes = self.nbytes
 
     @property
     def hlo_bytes(self) -> int:
@@ -66,21 +75,29 @@ class CommStats:
 
     # -- trace-time recording (idempotent set) ------------------------------
 
-    def record(self, phase: str, fmt: str, collective: str, part: str, nbytes: int) -> None:
+    def record(self, phase: str, fmt: str, collective: str, part: str, nbytes: int,
+               moved_bytes: int | None = None) -> None:
         assert collective in COLLECTIVE_KINDS, collective
         key = (phase, fmt, collective, part)
-        rec = ExchangeRecord(phase, fmt, collective, part, int(nbytes))
+        rec = ExchangeRecord(phase, fmt, collective, part, int(nbytes),
+                             moved_bytes=-1 if moved_bytes is None else int(moved_bytes))
         prev = self._records.get(key)
-        if prev is not None and (prev.nbytes, prev.count) != (rec.nbytes, rec.count):
+        if prev is not None and (
+            (prev.nbytes, prev.count, prev.moved_bytes)
+            != (rec.nbytes, rec.count, rec.moved_bytes)
+        ):
             raise ValueError(
                 f"CommStats key {key} re-recorded with different size "
-                f"({prev.nbytes}x{prev.count} -> {rec.nbytes})"
+                f"({prev.nbytes}x{prev.count} moved {prev.moved_bytes} -> "
+                f"{rec.nbytes} moved {rec.moved_bytes})"
             )
         self._records[key] = rec
 
-    def record_aval(self, phase: str, fmt: str, collective: str, part, x) -> None:
+    def record_aval(self, phase: str, fmt: str, collective: str, part, x,
+                    moved_bytes: int | None = None) -> None:
         """Record from a traced array's aval (shape/dtype known at trace time)."""
-        self.record(phase, fmt, collective, part, aval_bytes(x))
+        self.record(phase, fmt, collective, part, aval_bytes(x),
+                    moved_bytes=moved_bytes)
 
     # -- host-replay accumulation -------------------------------------------
 
@@ -94,7 +111,9 @@ class CommStats:
             self._records[key] = ExchangeRecord(phase, fmt, collective, part,
                                                 int(nbytes), count)
         else:
+            # host-replay bytes are already true traffic: moved == nbytes
             rec.nbytes += int(nbytes)
+            rec.moved_bytes += int(nbytes)
             rec.count += count
 
     # -- views ---------------------------------------------------------------
@@ -107,6 +126,13 @@ class CommStats:
         out: dict[str, int] = {}
         for r in self.records():
             out[r.phase] = out.get(r.phase, 0) + r.hlo_bytes
+        return out
+
+    def per_phase_moved(self) -> dict[str, int]:
+        """phase -> true wire bytes (self-sends excluded; no HLO factor)."""
+        out: dict[str, int] = {}
+        for r in self.records():
+            out[r.phase] = out.get(r.phase, 0) + r.moved_bytes
         return out
 
     def per_phase_fmt(self) -> dict[str, dict[str, int]]:
@@ -127,6 +153,11 @@ class CommStats:
     @property
     def total_bytes(self) -> int:
         return sum(r.hlo_bytes for r in self.records())
+
+    @property
+    def total_moved_bytes(self) -> int:
+        """True per-device wire traffic (identity permute pairs excluded)."""
+        return sum(r.moved_bytes for r in self.records())
 
     def table(self) -> list[dict]:
         """JSON-friendly dump (BENCH_comm.json, dry-run artifacts)."""

@@ -56,9 +56,14 @@ def _init_state(root: jax.Array, n: int, policy: traversal.TraversalPolicy) -> _
     )
 
 
-@functools.partial(jax.jit, static_argnames=("n", "policy"))
+@functools.partial(jax.jit, static_argnames=("n", "policy", "max_levels"))
 def bfs(
-    src: jax.Array, dst: jax.Array, root: jax.Array, n: int, policy: str = "top_down"
+    src: jax.Array,
+    dst: jax.Array,
+    root: jax.Array,
+    n: int,
+    policy: str = "top_down",
+    max_levels: int = 64,
 ) -> BFSResult:
     """BFS over a symmetric COO edge list (padding edges may use src=dst=n).
 
@@ -67,11 +72,18 @@ def bfs(
       root: scalar int32 source vertex.
       n: vertex count (static).
       policy: traversal policy name (see :mod:`repro.core.traversal`).
+      max_levels: depth cap on the level loop — the same guard (and the
+        same default) the distributed driver's ``DistBFSConfig.max_levels``
+        applies, so an adversarial high-diameter edge list (a path graph,
+        say) cannot keep the ``while_loop`` spinning for O(n) iterations.
+        Vertices beyond the cap stay unreached (parent/level = -1); a
+        truncated run is detectable as ``n_levels == max_levels`` — raise
+        the cap for legitimately high-eccentricity graphs.
     """
     pol = traversal.resolve(policy)
     oracle = traversal.DensityOracle(n)
     out = jax.lax.while_loop(
-        lambda s: s.active,
+        lambda s: s.active & (s.depth < max_levels),
         lambda s: traversal.level_once(src, dst, n, pol, oracle, s),
         _init_state(root, n, pol),
     )
@@ -87,7 +99,11 @@ def bfs_levels(
     max_levels: int = 64,
     policy: str = "top_down",
 ) -> tuple[BFSResult, jax.Array]:
-    """BFS + per-level frontier sizes (drives representation choice stats)."""
+    """BFS + per-level frontier sizes (drives representation choice stats).
+
+    The ``scan`` length doubles as the depth cap: levels beyond
+    ``max_levels`` are never expanded, mirroring ``bfs()``'s guard.
+    """
     pol = traversal.resolve(policy)
     oracle = traversal.DensityOracle(n)
 

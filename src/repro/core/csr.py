@@ -92,6 +92,16 @@ def _round_up(x: int, multiple: int) -> int:
     return -(-x // multiple) * multiple
 
 
+def padded_geometry(n: int, rows: int, cols: int,
+                    chunk_multiple: int = 1024) -> tuple[int, int]:
+    """(padded n, chunk width s) that :func:`partition_2d` will produce for
+    an ``n``-vertex graph — the single place the padding rule lives, so
+    artifact writers (BENCH_comm.json's byte-model geometry) cannot drift
+    from the replay's actual partition."""
+    n_pad = _round_up(max(n, rows * cols), rows * cols * chunk_multiple)
+    return n_pad, n_pad // (rows * cols)
+
+
 def partition_2d(
     g: CSRGraph,
     rows: int,
@@ -104,7 +114,7 @@ def partition_2d(
     ``chunk_multiple`` keeps the owned-chunk width s a multiple of the
     bit-packing chunk (1024) so compressed exchanges stay lane-aligned.
     """
-    n = _round_up(max(g.n, rows * cols), rows * cols * chunk_multiple)
+    n, _ = padded_geometry(g.n, rows, cols, chunk_multiple)
     part = Partition2D(n=n, n_orig=g.n, rows=rows, cols=cols)
     src, dst = g.src.astype(np.int64), g.dst.astype(np.int64)
 

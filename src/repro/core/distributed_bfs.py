@@ -26,8 +26,12 @@ chunk q = i*C + j of width s):
 
 Modes are *wire plans* and traversal directions are *policies*, both
 resolved through :mod:`repro.comm.registry`: mode 'raw' (uncompressed — the
-paper's Baseline), 'bitmap', 'auto' (bucketed adaptive) x policy 'top_down',
-'bottom_up', 'direction_opt' (Beamer per-level switch).  Every collective —
+paper's Baseline), 'bitmap', 'auto' (bucketed adaptive), 'btfly'
+(ButterFly BFS: the row/unreached exchanges become log2(C) staged
+``ppermute`` rounds that re-compress the merged stream per hop; any grid
+width works — non-power-of-two C folds its overhang ranks into a first
+stage) x policy 'top_down', 'bottom_up', 'direction_opt' (Beamer per-level
+switch).  Every collective —
 including the transpose permute and the termination psum — reports its wire
 bytes through :class:`repro.comm.CommStats`, so the accounting can be
 checked 1:1 against the collective operand sizes in the lowered HLO
@@ -50,7 +54,6 @@ from repro.comm import AdaptiveExchange, CommStats, ThresholdPolicy
 from repro.comm import registry as wire_registry
 from repro.core import traversal
 from repro.core.csr import BlockedGraph, Partition2D
-from repro.kernels.bitpack.ref import B_CLASSES
 
 INF = jnp.iinfo(jnp.int32).max
 
@@ -59,7 +62,7 @@ INF = jnp.iinfo(jnp.int32).max
 class DistBFSConfig:
     row_axes: tuple[str, ...] = ("data",)  # mesh axes spanning grid rows (R)
     col_axis: str = "model"  # mesh axis spanning grid columns (C)
-    mode: str = "auto"  # wire-plan name: 'raw' | 'bitmap' | 'auto'
+    mode: str = "auto"  # wire-plan name: 'raw' | 'bitmap' | 'auto' | 'btfly'
     policy: str = "top_down"  # traversal: 'top_down' | 'bottom_up' | 'direction_opt'
     alpha: float | None = None  # BU entry density; None = derive from the ladder
     beta: float = 0.05  # BU exit density (hysteresis)
@@ -72,11 +75,9 @@ class DistBFSConfig:
 
 def parent_width_class(n_c: int) -> int:
     """Smallest packing class covering column-local parent offsets."""
-    need = max((n_c - 1).bit_length(), 1)
-    for b in B_CLASSES:
-        if b >= need:
-            return b
-    return 32
+    from repro.comm.butterfly import width_class
+
+    return width_class(n_c)
 
 
 class _Carry(NamedTuple):
@@ -129,7 +130,8 @@ def _bfs_local(
     row_exchange = row_exchange_bu = unreached_gather = None
     if policy.uses_top_down:
         row_exchange = plan.build_row(
-            s, cfg.col_axis, c, p_width, policy=threshold, stats=stats, phase="bfs/row"
+            s, cfg.col_axis, c, n_c, p_width,
+            policy=threshold, stats=stats, phase="bfs/row",
         )
     if policy.uses_bottom_up:
         row_exchange_bu = plan.build_row_bu(
@@ -217,7 +219,7 @@ def build_bfs(
         lambda a, b: a * b, (mesh.shape[a] for a in cfg.row_axes)
     ), "grid rows must match row-axis product"
     assert part.cols == mesh.shape[cfg.col_axis]
-    if cfg.mode in ("bitmap", "auto") or policy.uses_bottom_up:
+    if cfg.mode in ("bitmap", "auto", "btfly") or policy.uses_bottom_up:
         assert part.chunk % 1024 == 0, (
             f"compressed modes and pull traversal need 1024-multiple chunks "
             f"(got s={part.chunk}); partition with chunk_multiple=1024"

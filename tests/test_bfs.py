@@ -52,6 +52,32 @@ def test_bfs_levels_sizes():
     assert sizes.sum() + 1 == n_reached  # root not counted in level frontiers
 
 
+def test_bfs_max_levels_guard():
+    """Regression: an adversarial high-diameter edge list (a path) used to
+    keep bfs()'s while_loop spinning for O(n) levels — the single-device
+    drivers now honor the same depth cap as DistBFSConfig.max_levels."""
+    n = 256
+    path = np.stack([np.arange(n - 1), np.arange(1, n)], axis=1)
+    g = builder.build_csr(path, n=n)
+    src, dst = _device_graph(g)
+    res = bfs.bfs(src, dst, jnp.int32(0), g.n, max_levels=10)
+    assert int(res.n_levels) == 10
+    level = np.asarray(res.level)
+    parent = np.asarray(res.parent)
+    # vertices within the cap are correct; the rest stay unreached
+    np.testing.assert_array_equal(level[:11], np.arange(11))
+    assert np.all(level[11:] == -1) and np.all(parent[11:] == -1)
+    # same cap semantics from the scan-based driver
+    res_l, sizes = bfs.bfs_levels(src, dst, jnp.int32(0), g.n, max_levels=10)
+    np.testing.assert_array_equal(np.asarray(res_l.level), level)
+    assert int(res_l.n_levels) == 10
+    # the default cap matches the distributed driver's
+    from repro.core.distributed_bfs import DistBFSConfig
+
+    full = bfs.bfs(src, dst, jnp.int32(0), g.n, max_levels=DistBFSConfig().max_levels)
+    assert int(full.n_levels) == 64 and int(np.asarray(full.level).max()) == 64
+
+
 def test_validator_catches_corruption():
     g = builder.build_csr(kronecker.kronecker_edges(8, seed=3), n=256)
     src, dst = _device_graph(g)

@@ -152,6 +152,103 @@ def test_bucket_choice_monotone_in_count_and_exceptions():
         prev = b
 
 
+def test_comm_stats_moved_bytes_accounting():
+    """moved_bytes records true wire traffic next to the HLO-parity nbytes:
+    identity permute pairs move nothing, gathers keep their own chunk, and
+    the ring all-reduce moves 2(g-1)/g of its operand."""
+    stats = comm.CommStats()
+    # default: moved == nbytes (host-replay adds are already true traffic)
+    stats.add("zone", "fmt", "all-to-all", 100)
+    stats.add("zone", "fmt", "all-to-all", 50)
+    (rec,) = stats.records()
+    assert rec.nbytes == 150 and rec.moved_bytes == 150
+    # trace-style record with an explicit moved count
+    stats.record("t", "membership", "collective-permute", "words", 8192,
+                 moved_bytes=5461)
+    rec = [r for r in stats.records() if r.phase == "t"][0]
+    assert rec.nbytes == 8192 and rec.moved_bytes == 5461
+    assert rec.hlo_bytes == 8192  # HLO parity never uses moved bytes
+    assert stats.per_phase_moved()["t"] == 5461
+    assert stats.total_moved_bytes == 150 + 5461
+    # re-recording with a different moved count is rejected like nbytes
+    with pytest.raises(ValueError):
+        stats.record("t", "membership", "collective-permute", "words", 8192,
+                     moved_bytes=0)
+
+
+def test_engine_ppermute_identity_pairs_move_nothing():
+    """An all-self-pairs transpose records full HLO operand bytes but zero
+    moved bytes (the Partition2D transpose always contains self-sends)."""
+    import jax
+    from jax.sharding import PartitionSpec as P
+
+    from repro import compat
+
+    mesh = jax.make_mesh((1,), ("x",))
+    stats = comm.CommStats()
+
+    def body(x):
+        ex = comm.AdaptiveExchange("bfs/transpose", "x", 1, None, stats)
+        return ex.ppermute(x.reshape(-1), [(0, 0)], fmt="membership")
+
+    f = jax.jit(compat.shard_map(body, mesh=mesh, in_specs=P(), out_specs=P()))
+    np.testing.assert_array_equal(
+        np.asarray(f(jnp.arange(64, dtype=jnp.int32))), np.arange(64)
+    )
+    (rec,) = stats.records()
+    assert rec.collective == "collective-permute"
+    assert rec.nbytes == 64 * 4 and rec.moved_bytes == 0
+
+
+def test_butterfly_stage_collectives_single_rank():
+    """ppermute_min_block / ppermute_membership_block round-trip on a
+    single-rank axis with an identity pair (the degenerate stage): packed
+    streams reconstruct the dense candidates / membership exactly."""
+    import jax
+    from jax.sharding import PartitionSpec as P
+
+    from repro import compat
+    from repro.comm import butterfly
+    from repro.comm import collectives as cc_new
+
+    s, n = 8192, 1 << 15
+    ladder, floor = butterfly.row_wire(s, n)
+    assert ladder.specs, "row wire must keep sparse buckets at this geometry"
+    mesh = jax.make_mesh((1,), ("x",))
+    rng = np.random.default_rng(0)
+    for density in (0.001, 0.02, 0.9):
+        block_np = np.where(
+            rng.random((2, s)) < density, rng.integers(0, n, size=(2, s)),
+            np.iinfo(np.int32).max,
+        ).astype(np.int32)
+
+        def body(block):
+            ex = comm.AdaptiveExchange("stage", "x", 1, ladder, None)
+            return cc_new.ppermute_min_block(
+                ex, block.reshape(2, s), [(0, 0)], ladder, floor,
+                gate=jnp.bool_(True),
+            )
+
+        f = jax.jit(compat.shard_map(body, mesh=mesh, in_specs=P(), out_specs=P()))
+        out = np.asarray(f(jnp.asarray(block_np)))
+        np.testing.assert_array_equal(out, block_np, err_msg=str(density))
+
+        bits_np = rng.random((2, s)) < density
+        col_ladder, _ = butterfly.unreached_wire(s)
+
+        def body_m(bits):
+            ex = comm.AdaptiveExchange("stage", "x", 1, col_ladder, None)
+            return cc_new.ppermute_membership_block(
+                ex, bits.reshape(2, s), [(0, 0)], col_ladder,
+                gate=jnp.bool_(True),
+            )
+
+        fm = jax.jit(compat.shard_map(body_m, mesh=mesh, in_specs=P(), out_specs=P()))
+        np.testing.assert_array_equal(
+            np.asarray(fm(jnp.asarray(bits_np))), bits_np, err_msg=str(density)
+        )
+
+
 @pytest.mark.slow
 def test_adaptive_exchange_bucket_choice_monotone():
     """End-to-end through AdaptiveExchange.dispatch: denser memberships
