@@ -42,8 +42,10 @@ import numpy as np
 
 from repro.comm import BitmapFormat, BitmapParentFormat, CommStats, DenseFormat, RawIdFormat
 from repro.comm import butterfly
+from repro.comm.formats import plane_wire_bytes
 from repro.comm.ladder import BucketLadder
 from repro.compression import codecs, threshold
+from repro.core import bfs as bfs_core
 from repro.core import csr as csrmod
 from repro.core import traversal, validate
 from repro.core.distributed_bfs import parent_width_class
@@ -74,14 +76,16 @@ def _host_bucket(ladder: BucketLadder, ids: np.ndarray) -> int:
     return len(ladder.specs)
 
 
-def _bucket_wire(ladder: BucketLadder, bucket: int, floor_fmt=None):
-    """(format name, wire bytes) of one subchunk at ``bucket``."""
+def _bucket_wire(ladder: BucketLadder, bucket: int, floor_fmt=None, b: int = 1):
+    """(format name, wire bytes of all ``b`` planes) of one subchunk at
+    ``bucket`` — dense floors scale linearly, id streams share the plane
+    header (:func:`repro.comm.plane_wire_bytes`)."""
     if bucket < len(ladder.specs):
         fmt = ladder.formats()[bucket]
-        return fmt.name, fmt.wire_bytes
+        return fmt.name, plane_wire_bytes(fmt, b)
     if floor_fmt is not None:
-        return floor_fmt.name, floor_fmt.wire_bytes
-    return "bitmap", 4 * ladder.floor_words
+        return floor_fmt.name, plane_wire_bytes(floor_fmt, b)
+    return "bitmap", b * 4 * ladder.floor_words
 
 
 def _packed_wire_bytes(ladder: BucketLadder, ids: np.ndarray) -> int:
@@ -90,25 +94,37 @@ def _packed_wire_bytes(ladder: BucketLadder, ids: np.ndarray) -> int:
 
 
 def _btfly_row_stage_replay(streams, cols: int, ladder: BucketLadder,
-                            floor_fmt):
+                            floor_fmt, b: int = 1):
     """Host replay of the butterfly row phase over ONE grid row.
 
-    ``streams[(j, k)]``: sorted local candidate ids sender column ``j``
-    holds for the row's ``k``-th destination chunk.  Mirrors the device
-    schedule exactly — fold, log2(P) pairwise stages, unfold — including the
-    per-stage row-wide format consensus (max bucket over every subchunk on
-    the wire that stage) and the union-merge that the next stage re-buckets.
+    ``streams[(j, k)]``: for ``b == 1``, the sorted local candidate ids
+    sender column ``j`` holds for the row's ``k``-th destination chunk; for
+    a multi-source batch, a length-``b`` list of per-plane id arrays.
+    Mirrors the device schedule exactly — fold, log2(P) pairwise stages,
+    unfold — including the per-stage row-wide format consensus (max bucket
+    over every subchunk AND plane on the wire that stage) and the per-plane
+    union-merge that the next stage re-buckets.  Stage bytes price all
+    planes at the shared-header plane wire
+    (:func:`repro.comm.butterfly.stage_unit_bytes` with ``b``).
     Returns (total bytes, stage log)."""
     sched = butterfly.ButterflySchedule(cols)
     p, extra, slots = sched.p, sched.extra, sched.slots
     empty = np.empty(0, np.int64)
 
+    def planes_of(j, q):
+        v = streams.get((j, q))
+        if v is None:
+            return [empty] * b
+        return [v] if b == 1 and not isinstance(v, list) else v
+
     def leaf_streams(j):
         rows_ = {}
         for r in range(p):
-            rows_[(r, 0)] = streams.get((j, r), empty)
+            rows_[(r, 0)] = planes_of(j, r)
             if slots == 2:
-                rows_[(r, 1)] = streams.get((j, p + r), empty) if r < extra else empty
+                rows_[(r, 1)] = (
+                    planes_of(j, p + r) if r < extra else [empty] * b
+                )
         return rows_
 
     state = {j: leaf_streams(j) for j in range(cols)}
@@ -120,22 +136,27 @@ def _btfly_row_stage_replay(streams, cols: int, ladder: BucketLadder,
         nonlocal total
         blocks = {src: [state[src][key] for key in keys] for src, dst, keys in sends}
         bucket = max(
-            (_host_bucket(ladder, ids) for blk in blocks.values() for ids in blk),
+            (_host_bucket(ladder, ids) for blk in blocks.values()
+             for planes in blk for ids in planes),
             default=0,
         )
-        fmt, unit = _bucket_wire(ladder, bucket, floor_fmt)
+        fmt, unit = _bucket_wire(ladder, bucket, floor_fmt, b=b)
         n_sub = len(sends[0][2])
         assert all(len(keys) == n_sub for _, _, keys in sends)
         nbytes = len(sends) * n_sub * unit
         total += nbytes
-        log.append({"stage": label, "fmt": fmt, "senders": len(sends),
-                    "subchunks": n_sub, "bytes": nbytes})
+        entry = {"stage": label, "fmt": fmt, "senders": len(sends),
+                 "subchunks": n_sub, "bytes": nbytes}
+        if b > 1:
+            entry["batch"] = b
+        log.append(entry)
         merged = {}
         for src, dst, keys in sends:
             for key in keys:
-                merged.setdefault(dst, {})[key] = np.union1d(
-                    state[dst][key], state[src][key]
-                )
+                merged.setdefault(dst, {})[key] = [
+                    np.union1d(d, s_)
+                    for d, s_ in zip(state[dst][key], state[src][key])
+                ]
         for dst, upd in merged.items():
             state[dst].update(upd)
 
@@ -161,20 +182,24 @@ def _btfly_row_stage_replay(streams, cols: int, ladder: BucketLadder,
 
 
 def _btfly_unreached_stage_replay(chunk_ids, s: int, cols: int,
-                                  ladder: BucketLadder):
+                                  ladder: BucketLadder, b: int = 1):
     """Host replay of the staged unreached all-gather over one grid row.
 
     ``chunk_ids[k]``: sorted local unreached ids of the row's ``k``-th
-    chunk.  The doubling block keeps chunk identity, so per-subchunk
-    buckets never change — only the block size per stage does."""
+    chunk (a length-``b`` list of per-plane arrays when batched).  The
+    doubling block keeps chunk identity, so per-subchunk buckets never
+    change — only the block size per stage does."""
     sched = butterfly.ButterflySchedule(cols)
     p, extra, slots = sched.p, sched.extra, sched.slots
     bitmap = BitmapFormat(s)
     empty = np.empty(0, np.int64)
 
-    def leaf_ids(r, sl):
+    def leaf_planes(r, sl):
         q = r if sl == 0 else p + r
-        return chunk_ids[q] if (sl == 0 or r < extra) else empty
+        if sl == 1 and r >= extra:
+            return [empty] * b
+        v = chunk_ids[q]
+        return [v] if b == 1 and not isinstance(v, list) else v
 
     total = 0
     log = []
@@ -182,16 +207,19 @@ def _btfly_unreached_stage_replay(chunk_ids, s: int, cols: int,
     def do_exchange(label, n_senders, leaf_sets):
         nonlocal total
         bucket = max(
-            (_host_bucket(ladder, leaf_ids(r, sl)) for leaves in leaf_sets
-             for r, sl in leaves),
+            (_host_bucket(ladder, ids) for leaves in leaf_sets
+             for r, sl in leaves for ids in leaf_planes(r, sl)),
             default=0,
         )
-        fmt, unit = _bucket_wire(ladder, bucket, bitmap)
+        fmt, unit = _bucket_wire(ladder, bucket, bitmap, b=b)
         n_sub = len(leaf_sets[0])
         nbytes = n_senders * n_sub * unit
         total += nbytes
-        log.append({"stage": label, "fmt": fmt, "senders": n_senders,
-                    "subchunks": n_sub, "bytes": nbytes})
+        entry = {"stage": label, "fmt": fmt, "senders": n_senders,
+                 "subchunks": n_sub, "bytes": nbytes}
+        if b > 1:
+            entry["batch"] = b
+        log.append(entry)
 
     if extra:
         do_exchange("fold", extra, [[(e, 1)] for e in range(extra)])
@@ -217,6 +245,42 @@ def build_replay_graph(scale: int, rows: int, cols: int, seed: int = 1):
     root = int(np.argmax(g.degrees()))
     level = validate.reference_bfs(g, root)
     return g, bg.part, level
+
+
+def _sender_split_streams(level_vec, lv, bu, g, part, owner):
+    """Candidate streams of one source plane at one level, split by sender.
+
+    The exchanged stream is the *candidate* set — every destination with a
+    frontier neighbor (pull levels: unreached destinations only) — split per
+    SENDER grid column, the granularity the device buckets on before its
+    grid-row pmax consensus (the union stream per owner chunk underestimates
+    both the counts and the consensus).  Shared by the single-source and the
+    multi-source replays so the two byte models cannot drift.
+
+    Returns ``({(grid row, sender col, owner chunk) -> local ids},
+    candidate count before the pull mask)``.
+    """
+    empty = np.empty(0, np.int64)
+    e_mask = level_vec[g.src] == lv
+    esrc, edst = g.src[e_mask], g.dst[e_mask]
+    n_cand = int(np.unique(edst).size) if edst.size else 0
+    if bu:
+        un_mask = (level_vec[edst] > lv) | (level_vec[edst] < 0)
+        esrc, edst = esrc[un_mask], edst[un_mask]
+    key = (esrc // part.n_c) * part.n + edst
+    pairs = np.unique(key) if key.size else empty
+    p_col, p_dst = pairs // part.n, pairs % part.n
+    p_q = owner[p_dst] if p_dst.size else empty
+    # pairs are sorted by (sender col, dst), so (sender col, chunk) groups
+    # are contiguous runs: one searchsorted-style split, no per-pair loop
+    group = p_col * (part.rows * part.cols) + p_q
+    cuts = np.flatnonzero(np.diff(group)) + 1
+    streams = {}
+    if pairs.size:
+        for start, stop in zip(np.r_[0, cuts], np.r_[cuts, pairs.size]):
+            jc, q = int(p_col[start]), int(p_q[start])
+            streams[(q // part.cols, jc, q)] = p_dst[start:stop] - q * part.chunk
+    return streams, n_cand
 
 
 def simulate_zones(
@@ -255,6 +319,7 @@ def simulate_zones(
     owner = np.minimum(np.arange(part.n) // s, rows * cols - 1)
     level_pad = np.full(part.n, -1, level.dtype)
     level_pad[: g.n] = level
+    deg = g.degrees()  # anticipatory oracle: Beamer m_f from the degree dot
 
     use_bu = policy == "bottom_up"  # host mirror of the carry's use_bu flag
     directions = []
@@ -282,37 +347,11 @@ def simulate_zones(
                       len(blob) * n_recv)
         # --- row phase: push exchanges candidate (id, parent) subchunks to
         # owners; pull exchanges found-bitmap + packed parents and folds in
-        # the unreached-bitmap all-gather over the grid row.  The exchanged
-        # stream is the *candidate* set — every destination with a frontier
-        # neighbor, reached or not — which is what the device ladder
-        # buckets on (the new frontier alone badly underestimates dense
-        # levels, where most of the graph neighbors the frontier).
-        e_mask = level[g.src] == lv
-        esrc = g.src[e_mask]
-        edst = g.dst[e_mask]
-        cand = np.unique(edst) if edst.size else np.empty(0, np.int64)
-        if bu:
-            # pull: only unreached destinations accumulate candidates
-            un_mask = (level[edst] > lv) | (level[edst] < 0)
-            esrc, edst = esrc[un_mask], edst[un_mask]
-        # split candidates by SENDER grid column: the device buckets each
-        # sender's per-destination subchunk separately and takes a pmax
-        # consensus over the grid row — the union stream per owner chunk
-        # underestimates both the counts and the consensus
-        key = (esrc // part.n_c) * part.n + edst
-        pairs = np.unique(key) if key.size else np.empty(0, np.int64)
-        p_col, p_dst = pairs // part.n, pairs % part.n
-        p_q = owner[p_dst] if p_dst.size else np.empty(0, np.int64)
-        # pairs are sorted by (sender col, dst), so (sender col, chunk)
-        # groups are contiguous runs: one searchsorted-style split, no
-        # per-pair Python loop
-        group = p_col * (rows * cols) + p_q
-        cuts = np.flatnonzero(np.diff(group)) + 1
-        streams = {}  # (grid row, sender col, owner chunk) -> local ids
-        if pairs.size:
-            for start, stop in zip(np.r_[0, cuts], np.r_[cuts, pairs.size]):
-                jc, q = int(p_col[start]), int(p_q[start])
-                streams[(q // cols, jc, q)] = p_dst[start:stop] - q * s
+        # the unreached-bitmap all-gather over the grid row.  Candidate-set
+        # sizing and the per-sender split live in _sender_split_streams
+        # (the new frontier alone badly underestimates dense levels, where
+        # most of the graph neighbors the frontier).
+        streams, n_cand = _sender_split_streams(level, lv, bu, g, part, owner)
 
         nxt = np.nonzero(level == lv + 1)[0]
         n_senders = cols - 1
@@ -383,15 +422,25 @@ def simulate_zones(
                 "direction": "bottom_up" if bu else "top_down",
                 "frontier": int(frontier.size),
                 "density": frontier.size / part.n,
-                "candidates": int(cand.size),
+                "candidates": n_cand,
                 "row_bytes_packed": row_bytes["packed"],
                 "row_bytes_btfly": btfly_bytes,
                 "btfly_stages": btfly_stages,
             }
         )
-        # next level's direction from the new frontier's count — the same
-        # update the device driver threads through the carry
-        use_bu = bool(oracle.next_direction(np.int32(nxt.size), bool(use_bu)))
+        # next level's direction from the new frontier's count plus the
+        # anticipatory m_f/m_u edge signals — the same psum'd update the
+        # device driver threads through the carry (direction_opt only; the
+        # fixed policies never consult the oracle)
+        m_f = m_u = growing = None
+        if policy == "direction_opt":
+            m_f = int(deg[level == lv + 1].sum())
+            m_u = int(deg[(level < 0) | (level > lv + 1)].sum())
+            growing = nxt.size > frontier.size
+        use_bu = bool(
+            oracle.next_direction(np.int32(nxt.size), bool(use_bu),
+                                  m_f=m_f, m_u=m_u, growing=growing)
+        )
 
     # predecessor reduction: one dense pass at the end (uncompressed in the
     # paper too — its Table 7.4 shows 0% there)
@@ -400,12 +449,279 @@ def simulate_zones(
     return stats, g, part, directions
 
 
-def run(scale: int = 17, rows: int = 4, cols: int = 4):
+#: batch width of the multi-source bench section (the B=4 acceptance row)
+BATCH_B = 4
+
+
+def batch_roots(g, n_roots: int) -> np.ndarray:
+    """The ``B`` highest-degree hub roots (one convention for the whole
+    repo: :func:`repro.core.bfs.hub_roots`)."""
+    return bfs_core.hub_roots(g.degrees(), n_roots)
+
+
+def simulate_batch(
+    scale: int, rows: int, cols: int, n_src: int,
+    policy: str = "direction_opt", seed: int = 1, graph=None,
+    level_cache=None,
+):
+    """Host replay of the MULTI-SOURCE packed-wire communication model.
+
+    Replays one batched BFS with ``n_src`` source planes level by level,
+    mirroring the device driver: per-plane directions from the shared
+    oracle (including the anticipatory Beamer ``m_f`` signal), one bucket
+    consensus per exchange taken as the max over every plane, and plane
+    wire pricing from :func:`repro.comm.plane_wire_bytes` (dense floors
+    linear, id-stream headers shared).  Returns a dict with per-plan totals
+    for the two row-phase plans plus the shared zones, in cluster-total
+    bytes — the same convention :func:`simulate_zones` uses — so
+    ``bytes_per_source`` at B=4 is directly comparable with a B=1 replay of
+    the same model.
+    """
+    g = graph or builder.build_csr(
+        kronecker.kronecker_edges(scale, seed=seed), n=1 << scale
+    )
+    n_pad, _ = csrmod.padded_geometry(g.n, rows, cols)
+    part = csrmod.Partition2D(n=n_pad, n_orig=g.n, rows=rows, cols=cols)
+    s = part.chunk
+    ranks = rows * cols
+    b = n_src
+    roots = batch_roots(g, b)
+    if level_cache is None:
+        level_cache = {}
+    levels = [
+        level_cache.setdefault(int(r), validate.reference_bfs(g, int(r)))
+        for r in roots
+    ]
+    dpad = np.zeros(part.n, np.int64)  # degree vector at padded geometry
+    dpad[: g.n] = g.degrees()
+    wp = parent_width_class(part.n_c)
+    col_ladder = BucketLadder.default(s)
+    row_ladder = BucketLadder.default(s, floor_words=s, payload_width=wp)
+    bt_ladder, bt_floor = butterfly.row_wire(s, part.n)
+    un_ladder, _ = butterfly.unreached_wire(s)
+    oracle = traversal.DensityOracle(part.n, alpha=traversal.ladder_alpha(s, wp))
+    bitmap = BitmapFormat(s)
+    bmp_parent = BitmapParentFormat(s, wp) if wp < 32 else DenseFormat(s)
+    owner = np.minimum(np.arange(part.n) // s, ranks - 1)
+    level_pad = [np.full(part.n, -1, lv.dtype) for lv in levels]
+    for k, lv in enumerate(levels):
+        level_pad[k][: g.n] = lv
+    adaptive = policy == "direction_opt"
+    max_level = max(int(lv.max()) for lv in levels)
+    empty = np.empty(0, np.int64)
+
+    zones = {
+        # one broadcast carries all B roots (4 bytes each) to every rank
+        "broadcast": 4 * b * ranks,
+        "column": 0, "row": {"alltoall": 0, "btfly": 0}, "transpose": 0,
+        "termination": 0, "degree": 0, "consensus": {"alltoall": 0, "btfly": 0},
+        "reduction": 4 * part.n * b,
+    }
+    btfly_stages = []
+    if adaptive:
+        # the anticipatory oracle's one-time owned-degree psum (grid-row
+        # all-reduce of n_r ints, HLO-doubled), shared by every plane
+        zones["degree"] = 8 * part.n_r * ranks
+
+    use_bu = [policy == "bottom_up"] * b
+    for lv in range(max_level):
+        frontiers = [np.nonzero(lp == lv)[0] for lp in level_pad]
+        act = [f.size > 0 for f in frontiers]
+        if policy == "top_down":
+            bu = [False] * b
+        elif policy == "bottom_up":
+            bu = [True] * b
+        else:
+            bu = list(use_bu)
+        # --- transpose: all B planes ride one (B, s)-bool permute per rank
+        zones["transpose"] += b * s * ranks
+        # --- termination psum: (B,) counts (+ m_f/m_u planes when adaptive)
+        zones["termination"] += (3 if adaptive else 1) * 8 * b * ranks
+        # --- column phase: per owner chunk, bucket = max over planes
+        for q in range(ranks):
+            plane_ids = [
+                f[owner[f] == q] - q * s if a else empty
+                for f, a in zip(frontiers, act)
+            ]
+            bkt = max(_host_bucket(col_ladder, ids) for ids in plane_ids)
+            unit = _bucket_wire(col_ladder, bkt, bitmap, b=b)[1]
+            zones["column"] += unit * (rows - 1)
+        if col_ladder.specs:
+            for plan in ("alltoall", "btfly"):
+                zones["consensus"][plan] += 8 * cols  # one per column group
+        # --- row phase: the same per-sender candidate split as the
+        # single-source replay (_sender_split_streams), keyed per plane and
+        # routed to the wire of each plane's direction
+        push_streams = {}
+        pull_streams = {}
+        un_ids = None
+        for k in range(b):
+            if not act[k]:
+                continue
+            streams_k, _ = _sender_split_streams(
+                level_pad[k], lv, bu[k], g, part, owner
+            )
+            target = pull_streams if bu[k] else push_streams
+            for site, ids in streams_k.items():
+                target.setdefault(site, {})[k] = ids
+        push_active = any(a and not d for a, d in zip(act, bu))
+        pull_active = any(a and d for a, d in zip(act, bu))
+
+        def plane_list(streams, i, jc, q):
+            per = streams.get((i, jc, q), {})
+            return [per.get(k, empty) for k in range(b)]
+
+        n_senders = cols - 1
+        if push_active:
+            # direct plan: one consensus per grid row, every chunk pays the
+            # row's worst (sender, destination, plane) bucket
+            for i in range(rows):
+                bkt = max(
+                    _host_bucket(row_ladder, ids)
+                    for jc in range(cols) for kq in range(cols)
+                    for ids in plane_list(push_streams, i, jc, i * cols + kq)
+                )
+                unit = _bucket_wire(row_ladder, bkt, b=b)[1]
+                zones["row"]["alltoall"] += unit * n_senders * cols
+            zones["consensus"]["alltoall"] += 8 * rows
+            # butterfly plan: staged replay of the same plane streams
+            for i in range(rows):
+                row_streams = {
+                    (jc, kq): plane_list(push_streams, i, jc, i * cols + kq)
+                    for jc in range(cols) for kq in range(cols)
+                }
+                t, slog = _btfly_row_stage_replay(
+                    row_streams, cols, bt_ladder, bt_floor, b=b
+                )
+                zones["row"]["btfly"] += t
+                zones["consensus"]["btfly"] += 8 * len(slog)
+                for entry in slog:
+                    btfly_stages.append({"grid_row": i, "level": lv, **entry})
+        if pull_active:
+            # pull wire is density-independent: every plane pays the
+            # found-bitmap + packed-parent unit plus the unreached gather
+            pull_unit = plane_wire_bytes(bmp_parent, b)
+            gather_unit = plane_wire_bytes(bitmap, b)
+            zones["row"]["alltoall"] += (pull_unit + gather_unit) * n_senders * ranks
+            un_ids = [
+                [
+                    np.nonzero(
+                        ((level_pad[k][q * s:(q + 1) * s] > lv)
+                         | (level_pad[k][q * s:(q + 1) * s] < 0))
+                        if bu[k] and act[k]
+                        else np.zeros(s, bool)
+                    )[0]
+                    for k in range(b)
+                ]
+                for q in range(ranks)
+            ]
+            for i in range(rows):
+                row_streams = {
+                    (jc, kq): plane_list(pull_streams, i, jc, i * cols + kq)
+                    for jc in range(cols) for kq in range(cols)
+                }
+                t, slog = _btfly_row_stage_replay(
+                    row_streams, cols, bt_ladder, bt_floor, b=b
+                )
+                zones["row"]["btfly"] += t
+                zones["consensus"]["btfly"] += 8 * len(slog)
+                for entry in slog:
+                    btfly_stages.append(
+                        {"grid_row": i, "level": lv, "zone": "row-pull", **entry}
+                    )
+                t, slog = _btfly_unreached_stage_replay(
+                    un_ids[i * cols:(i + 1) * cols], s, cols, un_ladder, b=b
+                )
+                zones["row"]["btfly"] += t
+                zones["consensus"]["btfly"] += 8 * len(slog)
+                for entry in slog:
+                    btfly_stages.append(
+                        {"grid_row": i, "level": lv, "zone": "unreached", **entry}
+                    )
+        # --- next level's per-plane direction: the same psum'd signals the
+        # device threads through the carry
+        for k in range(b):
+            nxt = np.nonzero(level_pad[k] == lv + 1)[0]
+            m_f = m_u = growing = None
+            if adaptive:
+                nxt_mask = level_pad[k] == lv + 1
+                un_mask = (level_pad[k] < 0) | (level_pad[k] > lv + 1)
+                m_f = int(dpad[nxt_mask].sum())
+                m_u = int(dpad[un_mask].sum())
+                growing = nxt.size > frontiers[k].size
+            use_bu[k] = bool(
+                oracle.next_direction(np.int32(nxt.size), bool(use_bu[k]),
+                                      m_f=m_f, m_u=m_u, growing=growing)
+            )
+
+    shared = (zones["broadcast"] + zones["column"] + zones["transpose"]
+              + zones["termination"] + zones["degree"] + zones["reduction"])
+    plans = {}
+    for plan in ("alltoall", "btfly"):
+        total = shared + zones["row"][plan] + zones["consensus"][plan]
+        plans[plan] = {
+            "row_bytes": zones["row"][plan],
+            "consensus_bytes": zones["consensus"][plan],
+            "total_bytes": total,
+            "bytes_per_source": total / b,
+        }
+    return {
+        "B": b,
+        "policy": policy,
+        "roots": [int(r) for r in roots],
+        "zones": {k: v for k, v in zones.items() if k not in ("row", "consensus")},
+        "plans": plans,
+        "btfly_stages": btfly_stages,
+    }
+
+
+def run_batch(scale: int = 15, rows: int = 2, cols: int = 2,
+              n_src: int = BATCH_B, prebuilt=None):
+    """Batched-vs-single packed-wire comparison for BENCH_comm.json.
+
+    For each policy: a B=``n_src`` multi-source replay and the B=1 replay
+    of the SAME model (same root = the argmax-degree hub), per row-phase
+    plan.  The acceptance invariant — ``bytes_per_source`` at B=4 strictly
+    below the B=1 total, for both plans — is enforced by
+    ``scripts/check_bench_comm.py`` in CI.  ``prebuilt`` (from
+    :func:`build_replay_graph`) shares the graph AND the hub root's
+    reference levels with the single-source replay suite.
+    """
+    cache = {}  # root -> reference levels, shared by every replay of g
+    if prebuilt is not None:
+        g, _, hub_level = prebuilt
+        cache[int(np.argmax(g.degrees()))] = hub_level
+    else:
+        g = builder.build_csr(
+            kronecker.kronecker_edges(scale, seed=1), n=1 << scale
+        )
+    out = {"B": n_src, "policies": {}}
+    for policy in POLICIES:
+        batched = simulate_batch(scale, rows, cols, n_src, policy=policy,
+                                 graph=g, level_cache=cache)
+        single = simulate_batch(scale, rows, cols, 1, policy=policy,
+                                graph=g, level_cache=cache)
+        entry = {"roots": batched["roots"], "zones": batched["zones"],
+                 "plans": {}}
+        for plan in ("alltoall", "btfly"):
+            entry["plans"][plan] = {
+                "batch": n_src,
+                "row_bytes": batched["plans"][plan]["row_bytes"],
+                "total_bytes": batched["plans"][plan]["total_bytes"],
+                "bytes_per_source": batched["plans"][plan]["bytes_per_source"],
+                "b1_total_bytes": single["plans"][plan]["total_bytes"],
+            }
+        entry["btfly_stages"] = batched["btfly_stages"]
+        out["policies"][policy] = entry
+    return out
+
+
+def run(scale: int = 17, rows: int = 4, cols: int = 4, prebuilt=None):
     """-> (table rows with a ``policy`` key, per-policy per-level log)."""
     pol = threshold.ThresholdPolicy()
     table = []
     policy_levels = {}
-    prebuilt = build_replay_graph(scale, rows, cols)
+    prebuilt = prebuilt or build_replay_graph(scale, rows, cols)
     for policy in POLICIES:
         stats, g, part, directions = simulate_zones(
             scale, rows, cols, policy=policy, prebuilt=prebuilt
@@ -454,6 +770,16 @@ def print_table(table: list[dict]) -> None:
     for r in table:
         print(f"{r['policy']},{r['zone']},{r['format']},{r['plan']},{r['bytes']},"
               f"{r['reduction_pct']:.2f},{r['modeled_time_reduction_pct']:.2f}")
+
+
+def print_batch(batch: dict) -> None:
+    print(f"# multi-source batch (B={batch['B']}): packed-wire bytes per "
+          "source vs the single-source total of the same model")
+    print("policy,plan,batch,total_bytes,bytes_per_source,b1_total_bytes")
+    for policy, entry in batch["policies"].items():
+        for plan, d in entry["plans"].items():
+            print(f"{policy},{plan},{d['batch']},{d['total_bytes']},"
+                  f"{d['bytes_per_source']:.1f},{d['b1_total_bytes']}")
 
 
 def print_levels(policy_levels: dict[str, list[dict]]) -> None:

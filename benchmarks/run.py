@@ -21,6 +21,7 @@ def write_bench_comm(
     full: bool,
     table: list[dict] | None = None,
     policy_levels: dict | None = None,
+    batch: dict | None = None,
 ) -> None:
     from benchmarks import bfs_comm
 
@@ -30,8 +31,36 @@ def write_bench_comm(
     # the padding rule partition_2d applies (1024-multiple chunks): the
     # staged-byte-model check recomputes wire geometry from (n, chunk)
     n, chunk = csrmod.padded_geometry(1 << scale, rows, cols)
+    prebuilt = None
+    if table is None or batch is None:
+        # one graph + hub reference for both replay suites
+        prebuilt = bfs_comm.build_replay_graph(scale, rows, cols)
     if table is None:
-        table, policy_levels = bfs_comm.run(scale=scale, rows=rows, cols=cols)
+        table, policy_levels = bfs_comm.run(
+            scale=scale, rows=rows, cols=cols, prebuilt=prebuilt
+        )
+    if batch is None:
+        batch = bfs_comm.run_batch(
+            scale=scale, rows=rows, cols=cols, prebuilt=prebuilt
+        )
+    # the multi-source rows ride the same table (batch column + per-source
+    # bytes); single-source rows carry batch=1 for uniform consumers
+    for r in table:
+        r.setdefault("batch", 1)
+    for policy, entry in batch["policies"].items():
+        for plan, d in entry["plans"].items():
+            table.append(
+                {
+                    "policy": policy,
+                    "zone": "total",
+                    "format": "packed",
+                    "plan": plan,
+                    "batch": d["batch"],
+                    "bytes": d["total_bytes"],
+                    "bytes_per_source": d["bytes_per_source"],
+                    "b1_total_bytes": d["b1_total_bytes"],
+                }
+            )
     doc = {
         "benchmark": "bfs_comm",
         "scale": scale,
@@ -45,6 +74,9 @@ def write_bench_comm(
         # per-policy per-level direction + packed row bytes: makes the
         # direction-opt vs top_down wire saving visible level by level
         "policy_levels": policy_levels or {},
+        # multi-source batch section: B=4 planes vs the B=1 replay of the
+        # same packed-wire model (shared headers + consensus amortization)
+        "batch": batch,
     }
     with open(path, "w") as f:
         json.dump(doc, f, indent=2)
@@ -73,10 +105,18 @@ def main() -> None:
 
     def bfs_comm_suite() -> None:
         scale, rows, cols = _bench_comm_size(args.full)
-        table, policy_levels = bfs_comm.run(scale=scale, rows=rows, cols=cols)
+        # one graph + hub reference for both replay suites
+        prebuilt = bfs_comm.build_replay_graph(scale, rows, cols)
+        table, policy_levels = bfs_comm.run(
+            scale=scale, rows=rows, cols=cols, prebuilt=prebuilt
+        )
         bfs_comm.print_table(table)
         bfs_comm.print_levels(policy_levels)
-        bench_table.append((table, policy_levels))
+        batch = bfs_comm.run_batch(
+            scale=scale, rows=rows, cols=cols, prebuilt=prebuilt
+        )
+        bfs_comm.print_batch(batch)
+        bench_table.append((table, policy_levels, batch))
 
     suites = [
         ("codecs (Tables 5.4/5.5)", codecs.main),
@@ -107,9 +147,10 @@ def main() -> None:
     # must not be silently re-run here
     if "bench-json" not in args.skip and bench_table:
         try:
-            table, policy_levels = bench_table[0]
+            table, policy_levels, batch = bench_table[0]
             write_bench_comm(
-                args.bench_json, args.full, table=table, policy_levels=policy_levels
+                args.bench_json, args.full, table=table,
+                policy_levels=policy_levels, batch=batch,
             )
         except Exception:  # noqa: BLE001
             failures.append("bench-json")

@@ -1,18 +1,26 @@
 """Verify BENCH_comm.json's staged butterfly volumes against the static
-byte model.
+byte model, and the multi-source batch acceptance invariant.
 
 Usage: PYTHONPATH=src python scripts/check_bench_comm.py [BENCH_comm.json]
 
 Every ``btfly_stages`` entry the host replay logged must satisfy
 
-    bytes == senders * subchunks * stage_unit_bytes(s, n, fmt)
+    bytes == senders * subchunks * stage_unit_bytes(s, n, fmt, b=batch)
 
-up to one packing chunk of padding per subchunk — the stage formats are
-static-geometry wire formats, so any larger disagreement means the replay
-and the device wire plan have diverged (the exact contamination the
+up to one packing chunk of padding per subchunk-plane — the stage formats
+are static-geometry wire formats, so any larger disagreement means the
+replay and the device wire plan have diverged (the exact contamination the
 butterfly-vs-alltoall comparison must not carry).  Also re-checks that the
 per-level ``row_bytes_btfly`` totals equal the sum of their stages and that
 the table's btfly row equals the per-level sum.
+
+The ``batch`` section adds the multi-source invariant: ``bytes_per_source``
+at B>1 must sit strictly below the B=1 total of the same packed-wire model
+for both row-phase plans on the policies whose wire actually amortizes
+(top_down's id-stream headers; direction_opt's shared degree psum + mixed
+wires).  Pure bottom_up's direct pull wire is density-independent per
+plane — every component scales linearly — so it is held to non-strict
+(no regression) instead.
 """
 
 from __future__ import annotations
@@ -22,8 +30,30 @@ import sys
 
 from repro.comm import butterfly
 
-#: slack per subchunk: one 1024-value packing chunk of u32 words
+#: slack per subchunk-plane: one 1024-value packing chunk of u32 words
 PAD_BYTES = 4 * 1024
+
+#: policies whose batched packed wire must be STRICTLY cheaper per source
+STRICT_BATCH_POLICIES = ("top_down", "direction_opt")
+
+
+def _check_stage(e: dict, s: int, n: int, ctx: str = "") -> None:
+    zone = e.get("zone", "row")
+    if zone == "row-pull":
+        zone = "row"  # the pull butterfly rides the same row wire
+    b = e.get("batch", 1)
+    unit = butterfly.stage_unit_bytes(s, n, e["fmt"], zone=zone, b=b)
+    model = e["senders"] * e["subchunks"] * unit
+    tol = e["senders"] * e["subchunks"] * b * PAD_BYTES
+    if abs(e["bytes"] - model) > tol:
+        where = " ".join(
+            [ctx] + [f"{k}={e[k]}" for k in ("grid_row", "level", "zone")
+                     if k in e]
+        ).strip()
+        raise SystemExit(
+            f"{where} stage {e['stage']}: replayed {e['bytes']} B vs model "
+            f"{model} B (fmt={e['fmt']}, batch={b}, tol={tol})"
+        )
 
 
 def check(doc: dict) -> int:
@@ -34,17 +64,7 @@ def check(doc: dict) -> int:
         for d in levels:
             level_sum = 0
             for e in d["btfly_stages"]:
-                unit = butterfly.stage_unit_bytes(
-                    s, n, e["fmt"], zone=e.get("zone", "row")
-                )
-                model = e["senders"] * e["subchunks"] * unit
-                tol = e["senders"] * e["subchunks"] * PAD_BYTES
-                if abs(e["bytes"] - model) > tol:
-                    raise SystemExit(
-                        f"{policy} level {d['level']} stage {e['stage']}: "
-                        f"replayed {e['bytes']} B vs model {model} B "
-                        f"(fmt={e['fmt']}, tol={tol})"
-                    )
+                _check_stage(e, s, n, ctx=f"{policy} level {d['level']}")
                 level_sum += e["bytes"]
                 n_checked += 1
             if level_sum != d["row_bytes_btfly"]:
@@ -56,6 +76,7 @@ def check(doc: dict) -> int:
         table_rows = [
             r for r in doc["table"]
             if r["policy"] == policy and r.get("plan") == "btfly"
+            and r.get("batch", 1) == 1
         ]
         assert table_rows, f"no btfly table row for policy {policy}"
         if table_rows[0]["bytes"] != total:
@@ -66,13 +87,45 @@ def check(doc: dict) -> int:
     return n_checked
 
 
+def check_batch(doc: dict) -> int:
+    """Multi-source section: staged byte model + the per-source invariant."""
+    batch = doc.get("batch")
+    assert batch, "BENCH_comm.json lacks the multi-source batch section"
+    s, n = doc["chunk"], doc["n"]
+    n_checked = 0
+    for policy, entry in batch["policies"].items():
+        for e in entry.get("btfly_stages", ()):
+            _check_stage(e, s, n, ctx=f"batch {policy}")
+            n_checked += 1
+        for plan, d in entry["plans"].items():
+            per_src, b1 = d["bytes_per_source"], d["b1_total_bytes"]
+            if policy in STRICT_BATCH_POLICIES and not per_src < b1:
+                raise SystemExit(
+                    f"batch {policy}/{plan}: bytes_per_source {per_src} not "
+                    f"strictly below the B=1 total {b1} — the shared-header/"
+                    "consensus amortization regressed"
+                )
+            if per_src > b1:
+                raise SystemExit(
+                    f"batch {policy}/{plan}: bytes_per_source {per_src} "
+                    f"exceeds the B=1 total {b1}"
+                )
+            print(f"batch B={d['batch']} {policy}/{plan}: "
+                  f"{per_src:.0f} B/source vs {b1} B at B=1")
+            n_checked += 1
+    return n_checked
+
+
 def main() -> None:
     path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_comm.json"
     with open(path) as f:
         doc = json.load(f)
     assert "btfly" in doc.get("plans", ()), "BENCH_comm.json lacks the btfly plan"
     n = check(doc)
+    nb = check_batch(doc)
     print(f"BENCH BTFLY BYTE MODEL OK ({n} stage entries checked)")
+    print(f"BENCH BATCH MODEL OK ({nb} batch entries checked, "
+          f"B={doc['batch']['B']})")
 
 
 if __name__ == "__main__":

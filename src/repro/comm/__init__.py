@@ -40,16 +40,23 @@ from repro.comm.formats import (  # noqa: F401
     WireFormat,
     pack_bitmap,
     pack_id_stream,
+    pack_plane_meta,
+    plane_meta_words,
+    plane_wire_bytes,
     unpack_bitmap,
     unpack_id_stream,
+    unpack_plane_meta,
 )
 from repro.comm.ladder import BucketLadder, stream_stats  # noqa: F401
 from repro.comm.stats import CommStats, ExchangeRecord  # noqa: F401
 from repro.comm.collectives import (  # noqa: F401
     allgather_membership,
+    allgather_membership_planes,
     allreduce_int8,
     alltoall_bitmap_min,
+    alltoall_bitmap_min_planes,
     alltoall_min_candidates,
+    alltoall_min_candidates_planes,
 )
 from repro.comm import butterfly  # noqa: F401
 from repro.comm import registry  # noqa: F401

@@ -46,7 +46,13 @@ import jax.numpy as jnp
 
 from repro.comm import collectives as cc
 from repro.comm.engine import AdaptiveExchange
-from repro.comm.formats import INF, BitmapFormat, BitmapParentFormat, DenseFormat
+from repro.comm.formats import (
+    INF,
+    BitmapFormat,
+    BitmapParentFormat,
+    DenseFormat,
+    plane_wire_bytes,
+)
 from repro.comm.ladder import BucketLadder
 from repro.kernels.bitpack.ref import B_CLASSES
 
@@ -140,9 +146,10 @@ def unreached_wire(s: int, policy=None) -> tuple[BucketLadder, BitmapFormat]:
 
 
 def stage_unit_bytes(
-    s: int, n: int, fmt_name: str, zone: str = "row", policy=None
+    s: int, n: int, fmt_name: str, zone: str = "row", policy=None, b: int = 1
 ) -> int:
-    """Static byte model: wire bytes of ONE subchunk under ``fmt_name``.
+    """Static byte model: wire bytes of ONE subchunk (all ``b`` source
+    planes) under ``fmt_name``.
 
     This is what the CI parity check recomputes against the staged volumes
     the host replay wrote into BENCH_comm.json — every stage's bytes must
@@ -150,7 +157,11 @@ def stage_unit_bytes(
     consensus picked there, up to packing padding.  ``zone`` selects the
     wire ("row" or "unreached"): the same ``pfor16[...]`` name prices
     differently on the two (the row stream carries the parent payload).
+    With ``b > 1`` the id-stream sideband amortizes (one packed word per
+    plane instead of two) while dense floors scale linearly — see
+    :func:`repro.comm.formats.plane_wire_bytes`.
     """
+
     if zone == "row":
         ladder, floor = row_wire(s, n, policy=policy)
     elif zone == "unreached":
@@ -158,10 +169,10 @@ def stage_unit_bytes(
     else:
         raise KeyError(f"unknown butterfly zone {zone!r}")
     if fmt_name == floor.name:
-        return floor.wire_bytes
+        return plane_wire_bytes(floor, b)
     for fmt in ladder.formats():
         if fmt.name == fmt_name:
-            return fmt.wire_bytes
+            return plane_wire_bytes(fmt, b)
     raise KeyError(f"unknown {zone} stage format {fmt_name!r}")
 
 
@@ -176,16 +187,20 @@ def build_row_exchange(
     group_size: int,
     n_c: int,
     *,
+    b: int = 1,
     to_global: bool = False,
     policy=None,
     stats=None,
     phase: str = "bfs/row",
 ):
-    """Build ``fn(prop (c, s) int32) -> (s,) int32`` — the staged analog of
-    the direct row ALLTOALLV + min.
+    """Build ``fn(prop (b, c, s) int32) -> (b, s) int32`` — the staged
+    analog of the direct row ALLTOALLV + min, over ``b`` source planes.
 
     ``to_global`` globalizes column-local pull candidates (``j*n_c + local``)
     before the first stage; the push path's candidates are global already.
+    Every stage moves all ``b`` planes of its subchunks in one ppermute pair
+    and union-merges them per plane — the multi-source planes stack for
+    free on the staged exchange's per-hop merge.
     """
     c = group_size
     n = n_c * c
@@ -194,35 +209,37 @@ def build_row_exchange(
     p, extra, slots = sched.p, sched.extra, sched.slots
 
     def exchange(block, perm, gate, zone):
-        ex = AdaptiveExchange(zone, axis, c, ladder, stats)
+        ex = AdaptiveExchange(zone, axis, c, ladder, stats, planes=b)
         return cc.ppermute_min_block(ex, block, perm, ladder, floor, gate=gate)
 
     def run(prop: jax.Array) -> jax.Array:
-        assert prop.shape == (c, s), (prop.shape, c, s)
+        assert prop.shape == (b, c, s), (prop.shape, b, c, s)
         j = jax.lax.axis_index(axis)
         if to_global:
             prop = jnp.where(prop < INF, j * n_c + prop, INF)
         if c == 1:
-            return prop[0]
+            return prop[:, 0]
         jv = j & (p - 1)
+        prop_t = jnp.moveaxis(prop, 0, 1)  # (c, b, s): leaf-major layout
         # leaf state: row k slot 0 = destination chunk k, slot 1 = chunk p+k
-        main = prop[:p]
+        main = prop_t[:p]
         if extra:
             over = jnp.concatenate(
-                [prop[p:], jnp.full((p - extra, s), INF, jnp.int32)], axis=0
+                [prop_t[p:], jnp.full((p - extra, b, s), INF, jnp.int32)],
+                axis=0,
             )
-            state = jnp.stack([main, over], axis=1)  # (p, 2, s)
+            state = jnp.stack([main, over], axis=1)  # (p, 2, b, s)
             # folded first stage: overhang ranks merge their whole candidate
             # state onto ranks 0..extra-1
             recv = exchange(
-                state.reshape(p * slots, s),
+                state.reshape(p * slots, b, s),
                 sched.fold_perm(),
                 gate=j >= p,
                 zone=f"{phase}[btfly:fold]",
-            ).reshape(p, slots, s)
+            ).reshape(p, slots, b, s)
             state = jnp.minimum(state, jnp.where(j < extra, recv, INF))
         else:
-            state = main[:, None, :]  # (p, 1, s)
+            state = main[:, None]  # (p, 1, b, s)
 
         for t in range(sched.n_stages):
             m = 1 << t
@@ -232,18 +249,18 @@ def build_row_exchange(
             idx_send = send_base + 2 * m * jnp.arange(nblk, dtype=jnp.int32)
             idx_keep = keep_base + 2 * m * jnp.arange(nblk, dtype=jnp.int32)
             recv = exchange(
-                state[idx_send].reshape(nblk * slots, s),
+                state[idx_send].reshape(nblk * slots, b, s),
                 sched.stage_perm(t),
                 gate=j < p,
                 zone=f"{phase}[btfly:{t}]",
-            ).reshape(nblk, slots, s)
+            ).reshape(nblk, slots, b, s)
             state = state.at[idx_keep].min(recv)
 
-        row = jnp.take(state, jv, axis=0)  # (slots, s) — my merged leaf
-        own = row[0]
+        row = jnp.take(state, jv, axis=0)  # (slots, b, s) — my merged leaf
+        own = row[0]  # (b, s)
         if extra:
             recv = exchange(
-                row[1][None, :],
+                row[1][None],
                 sched.unfold_perm(),
                 gate=j < extra,
                 zone=f"{phase}[btfly:unfold]",
@@ -264,32 +281,34 @@ def build_unreached_gather(
     axis,
     group_size: int,
     *,
+    b: int = 1,
     policy=None,
     stats=None,
     phase: str = "bfs/unreached",
 ):
-    """Build ``fn(bits (s,) bool) -> (c*s,) bool`` — staged membership
-    all-gather over the grid row (bottom-up's unreached probe)."""
+    """Build ``fn(bits (b, s) bool) -> (b, c*s) bool`` — staged membership
+    all-gather over the grid row (bottom-up's unreached probe), one doubling
+    schedule carrying all ``b`` source planes."""
     c = group_size
     sched = ButterflySchedule(c)
     ladder, _ = unreached_wire(s, policy=policy)
     p, extra, slots = sched.p, sched.extra, sched.slots
 
     def exchange(block, perm, gate, zone):
-        ex = AdaptiveExchange(zone, axis, c, ladder, stats)
+        ex = AdaptiveExchange(zone, axis, c, ladder, stats, planes=b)
         return cc.ppermute_membership_block(ex, block, perm, ladder, gate=gate)
 
     def run(bits: jax.Array) -> jax.Array:
-        assert bits.shape == (s,), (bits.shape, s)
+        assert bits.shape == (b, s), (bits.shape, b, s)
         if c == 1:
             return bits
         j = jax.lax.axis_index(axis)
         jv = j & (p - 1)
-        state = jnp.zeros((p, slots, s), bool)
+        state = jnp.zeros((p, slots, b, s), bool)
         state = state.at[jv, 0].set(jnp.where(j < p, bits, False))
         if extra:
             recv = exchange(
-                bits[None, :], sched.fold_perm(), gate=j >= p,
+                bits[None], sched.fold_perm(), gate=j >= p,
                 zone=f"{phase}[btfly:fold]",
             )
             state = state.at[jv, 1].set(jnp.where(j < extra, recv[0], False))
@@ -300,27 +319,31 @@ def build_unreached_gather(
             idx_mine = start + jnp.arange(blk, dtype=jnp.int32)
             idx_partner = (start ^ blk) + jnp.arange(blk, dtype=jnp.int32)
             recv = exchange(
-                state[idx_mine].reshape(blk * slots, s),
+                state[idx_mine].reshape(blk * slots, b, s),
                 sched.stage_perm(t),
                 gate=j < p,
                 zone=f"{phase}[btfly:{t}]",
-            ).reshape(blk, slots, s)
+            ).reshape(blk, slots, b, s)
             state = state.at[idx_partner].set(jnp.where(j < p, recv, False))
 
         if extra:
             # overhang ranks need the whole gathered row slice back
             recv = exchange(
-                state.reshape(p * slots, s),
+                state.reshape(p * slots, b, s),
                 sched.unfold_perm(),
                 gate=j < extra,
                 zone=f"{phase}[btfly:unfold]",
-            ).reshape(p, slots, s)
+            ).reshape(p, slots, b, s)
             state = jnp.where(j >= p, recv, state)
             flat = jnp.concatenate(
-                [state[:, 0, :].reshape(-1), state[:extra, 1, :].reshape(-1)]
+                [
+                    jnp.moveaxis(state[:, 0], 0, 1).reshape(b, -1),
+                    jnp.moveaxis(state[:extra, 1], 0, 1).reshape(b, -1),
+                ],
+                axis=1,
             )
         else:
-            flat = state[:, 0, :].reshape(-1)
-        return flat  # (c*s,), chunk q of the row at [q*s:(q+1)*s]
+            flat = jnp.moveaxis(state[:, 0], 0, 1).reshape(b, -1)
+        return flat  # (b, c*s), chunk q of the row at [:, q*s:(q+1)*s]
 
     return run

@@ -30,6 +30,8 @@ from repro.comm.formats import (
     IdStreamFormat,
     Int8Format,
     RawIdFormat,
+    pack_plane_meta,
+    unpack_plane_meta,
 )
 from repro.comm.ladder import BucketLadder, stream_stats
 from repro.comm.stats import CommStats
@@ -109,6 +111,93 @@ def allgather_membership(
         lambda _: gather_bitmap(ex, bits)
     ]
     return ex.dispatch(ladder.bucket_for(count, exc_count), branches)
+
+
+# ---------------------------------------------------------------------------
+# plane-batched column phase: B membership planes per exchange
+# ---------------------------------------------------------------------------
+
+
+def gather_bitmap_planes(ex: AdaptiveExchange, bits: jax.Array) -> jax.Array:
+    """Width-1 bitmap all-gather of ``(B, s)`` membership planes ->
+    ``(B, group_size * s)``."""
+    b, s = bits.shape
+    fmt = BitmapFormat(s)
+    words = jax.vmap(fmt.pack)(bits)  # (B, s/32)
+    g = ex.all_gather(words, fmt=fmt.name).reshape(ex.group_size, b, -1)
+    mem = jax.vmap(jax.vmap(fmt.unpack))(g)  # (group, B, s)
+    return jnp.moveaxis(mem, 0, 1).reshape(b, -1)
+
+
+def gather_raw_ids_planes(ex: AdaptiveExchange, bits: jax.Array) -> jax.Array:
+    """Uncompressed 32-bit id-list all-gather of ``(B, s)`` planes."""
+    b, s = bits.shape
+    fmt = RawIdFormat(s)
+    ids, meta = jax.vmap(fmt.pack)(bits)  # (B, s), (B, 1)
+    g_ids = ex.all_gather(ids, fmt=fmt.name).reshape(ex.group_size, b, s)
+    g_meta = ex.all_gather(meta.reshape(b), fmt=fmt.name, part="meta").reshape(
+        ex.group_size, b, 1
+    )
+    u_ids, _ = jax.vmap(jax.vmap(lambda i, m: fmt.unpack(i, m, fill=s)))(
+        g_ids, g_meta
+    )  # (group, B, s)
+    return jax.vmap(
+        lambda u: _scatter_membership(u, s, ex.group_size)
+    )(jnp.moveaxis(u_ids, 0, 1))
+
+
+def allgather_membership_planes(
+    bits: jax.Array,
+    axis,
+    ladder: BucketLadder,
+    group_size: int,
+    *,
+    stats: CommStats | None = None,
+    phase: str = "bfs/column",
+):
+    """Adaptive all-gather of ``(B, s)`` membership planes (batched column
+    phase) -> ``(B, group_size * s)``.
+
+    One bucket consensus (max over every plane on every rank) and one pair
+    of collectives serve all B planes; sparse stages pack each plane's id
+    stream at the shared bucket and the B (count, exc) pairs ride a packed
+    one-word-per-plane sideband (:func:`repro.comm.formats.pack_plane_meta`).
+    """
+    b, s = bits.shape
+    assert s == ladder.s, (s, ladder.s)
+    ex = AdaptiveExchange(phase, axis, group_size, ladder, stats, planes=b)
+    if not ladder.specs:
+        return ex.dispatch(None, [lambda _: gather_bitmap_planes(ex, bits)])
+    ids, counts, exc_counts = jax.vmap(lambda x: stream_stats(x, s))(bits)
+    my_bucket = jnp.max(jax.vmap(ladder.bucket_for)(counts, exc_counts))
+
+    def sparse_branch(fmt: IdStreamFormat):
+        def run(_):
+            words, meta = jax.vmap(fmt.pack)(ids, counts)  # (B, dw), (B, 2)
+            pmeta = pack_plane_meta(meta[:, 0], meta[:, 1])  # (B,)
+            g_words = ex.all_gather(words, fmt=fmt.name).reshape(
+                group_size, b, fmt.data_words
+            )
+            g_meta = ex.all_gather(pmeta, fmt=fmt.name, part="meta").reshape(
+                group_size, b
+            )
+
+            def unpack_one(w, m):
+                c, e = unpack_plane_meta(m)
+                u_ids, _, _ = fmt.unpack(w, jnp.stack([c, e]), fill=s)
+                return u_ids
+
+            u_ids = jax.vmap(jax.vmap(unpack_one))(g_words, g_meta)
+            return jax.vmap(
+                lambda u: _scatter_membership(u, s, group_size)
+            )(jnp.moveaxis(u_ids, 0, 1))
+
+        return run
+
+    branches = [sparse_branch(f) for f in ladder.formats()] + [
+        lambda _: gather_bitmap_planes(ex, bits)
+    ]
+    return ex.dispatch(my_bucket, branches)
 
 
 # ---------------------------------------------------------------------------
@@ -204,6 +293,121 @@ def alltoall_min_candidates(
     return ex.dispatch(my_bucket, branches)
 
 
+def alltoall_dense_min_planes(ex: AdaptiveExchange, prop: jax.Array) -> jax.Array:
+    """Dense int32 all-to-all + min of ``(B, c, s)`` candidate planes."""
+    b, c, s = prop.shape
+    fmt = DenseFormat(s)
+    recv = ex.all_to_all(
+        jnp.moveaxis(prop, 0, 1), fmt=fmt.name
+    ).reshape(c, b, s)
+    return jnp.min(recv, axis=0)
+
+
+def alltoall_min_candidates_planes(
+    prop: jax.Array,
+    axis,
+    ladder: BucketLadder,
+    group_size: int,
+    *,
+    stats: CommStats | None = None,
+    phase: str = "bfs/row",
+    n_c: int | None = None,
+):
+    """Adaptive all-to-all + min-reduce of ``(B, c, s)`` candidate planes.
+
+    The batched analog of :func:`alltoall_min_candidates`: B source planes
+    share one bucket consensus (max over every (destination, plane) stream)
+    and one pair of wire collectives, with per-plane (count, exc) sidebands
+    packed one word per plane.  Payload localization is per plane exactly as
+    in the single-source exchange — candidates travel column-local and the
+    receiver re-globalizes from the all-to-all row index.
+    """
+    b, c, s = prop.shape
+    assert s == ladder.s and c == group_size, (prop.shape, ladder.s, group_size)
+    ex = AdaptiveExchange(phase, axis, group_size, ladder, stats, planes=b)
+    if not ladder.specs:
+        return ex.dispatch(None, [lambda _: alltoall_dense_min_planes(ex, prop)])
+    assert ladder.payload_width > 0, (
+        "row-phase ladder must carry the parent payload: build it with "
+        "BucketLadder.default(s, floor_words=s, payload_width=...)"
+    )
+
+    prop_t = jnp.moveaxis(prop, 0, 1)  # (c, B, s): all-to-all split layout
+    bits = prop_t < INF
+    flat = bits.reshape(c * b, s)
+    ids, counts = jax.vmap(lambda x: bp.compact_ids(x, s, fill=s))(flat)
+    gaps = jax.vmap(bpref.gaps_from_sorted)(ids, counts)
+    exc_counts = jnp.sum((gaps >> 16) > 0, axis=1)
+    my_bucket = jnp.max(jax.vmap(ladder.bucket_for)(counts, exc_counts))
+    base = 0 if n_c is None else jax.lax.axis_index(axis) * n_c
+
+    def sparse_branch(fmt: IdStreamFormat):
+        cap = fmt.spec.cap
+
+        def run(_):
+            def pack_one(ids_d, count_d, prop_d):
+                par = prop_d[jnp.clip(ids_d[:cap], 0, s - 1)] - base
+                return fmt.pack(ids_d, count_d, payload=par)
+
+            words, meta = jax.vmap(pack_one)(
+                ids, counts, prop_t.reshape(c * b, s)
+            )
+            pmeta = pack_plane_meta(meta[:, 0], meta[:, 1]).reshape(c, b)
+            r_words = ex.all_to_all(
+                words.reshape(c, b, fmt.data_words), fmt=fmt.name
+            ).reshape(c, b, fmt.data_words)
+            r_meta = ex.all_to_all(pmeta, fmt=fmt.name, part="meta").reshape(c, b)
+
+            def unpack_one(w, m, sender):
+                cnt, exc = unpack_plane_meta(m)
+                u_ids, u_count, par = fmt.unpack(
+                    w, jnp.stack([cnt, exc]), fill=s
+                )
+                valid = jnp.arange(cap) < u_count
+                seg = jnp.where(valid, u_ids[:cap], s)
+                glob = par if n_c is None else par + sender * n_c
+                val = jnp.where(valid, glob, INF)
+                return seg, val
+
+            senders = jnp.broadcast_to(
+                jnp.arange(c, dtype=jnp.int32)[:, None], (c, b)
+            )
+            segs, vals = jax.vmap(jax.vmap(unpack_one))(r_words, r_meta, senders)
+
+            def reduce_plane(seg_p, val_p):  # (c, cap) each
+                red = jax.ops.segment_min(
+                    val_p.reshape(-1), seg_p.reshape(-1), num_segments=s + 1
+                )
+                return red[:s].astype(jnp.int32)
+
+            return jax.vmap(reduce_plane)(
+                jnp.moveaxis(segs, 0, 1), jnp.moveaxis(vals, 0, 1)
+            )
+
+        return run
+
+    branches = [sparse_branch(f) for f in ladder.formats()] + [
+        lambda _: alltoall_dense_min_planes(ex, prop)
+    ]
+    return ex.dispatch(my_bucket, branches)
+
+
+def alltoall_bitmap_min_planes(
+    ex: AdaptiveExchange, prop: jax.Array, fmt: BitmapParentFormat, n_c: int
+) -> jax.Array:
+    """Batched bottom-up row exchange: B found-bitmap + packed-parent planes
+    per destination chunk, one all-to-all for all of them."""
+    b, c, s = prop.shape
+    assert s == fmt.s, (prop.shape, fmt.s)
+    prop_t = jnp.moveaxis(prop, 0, 1)  # (c, B, s)
+    words = jax.vmap(jax.vmap(fmt.pack))(prop_t)  # (c, B, data_words)
+    recv = ex.all_to_all(words, fmt=fmt.name).reshape(c, b, fmt.data_words)
+    bits, local = jax.vmap(jax.vmap(fmt.unpack))(recv)  # (c, B, s) each
+    sender = jnp.arange(c, dtype=jnp.int32)[:, None, None]
+    glob = jnp.where(bits, sender * n_c + local, INF)
+    return jnp.min(glob, axis=0).astype(jnp.int32)
+
+
 def alltoall_bitmap_min(
     ex: AdaptiveExchange, prop: jax.Array, fmt: BitmapParentFormat, n_c: int
 ) -> jax.Array:
@@ -240,26 +444,30 @@ def ppermute_min_block(
     *,
     gate: jax.Array,
 ):
-    """One butterfly stage: exchange a block of candidate subchunks.
+    """One butterfly stage: exchange a block of candidate subchunk planes.
 
-    ``block``: (nb, s) int32 global candidate parents (INF = none) — the
-    subchunks this rank sends to its stage partner under ``perm``.  Returns
-    the partner's (nb, s) block, reconstructed dense so the caller can
-    min-merge it (ButterFly BFS: the merged stream is re-bucketed by the
-    NEXT stage's call, so compression applies at every hop).
+    ``block``: (nb, b, s) int32 global candidate parents (INF = none) — the
+    ``nb`` subchunks x ``b`` source planes this rank sends to its stage
+    partner under ``perm``.  Returns the partner's (nb, b, s) block,
+    reconstructed dense so the caller can min-merge it (ButterFly BFS: the
+    merged stream is re-bucketed by the NEXT stage's call, so compression
+    applies at every hop).
 
     The wire representation is chosen per stage by the ladder: sparse
     delta+PFOR16 id streams carrying the parent payload at the ladder's
     ``payload_width`` (which must cover GLOBAL ids — merged streams lose
     sender identity, so column-local offsets cannot ride a butterfly), with
     ``floor_fmt`` (found-bitmap + packed parents, or dense int32) as the
-    dense floor.  ``gate`` masks the consensus contribution of ranks that do
-    not send at this stage (folded ranks), so their stale state never
-    inflates the group's bucket choice.
+    dense floor.  With b > 1 planes the per-stream (count, exc) sidebands
+    pack one word per plane (the shared header); the bucket consensus is a
+    single round over every plane of every subchunk.  ``gate`` masks the
+    consensus contribution of ranks that do not send at this stage (folded
+    ranks), so their stale state never inflates the group's bucket choice.
     """
-    nb, s = block.shape
-    bits = block < INF
-    ids, counts = jax.vmap(lambda b: bp.compact_ids(b, s, fill=s))(bits)
+    nb, b, s = block.shape
+    flat = block.reshape(nb * b, s)
+    bits = flat < INF
+    ids, counts = jax.vmap(lambda x: bp.compact_ids(x, s, fill=s))(bits)
     gaps = jax.vmap(bpref.gaps_from_sorted)(ids, counts)
     exc_counts = jnp.sum((gaps >> 16) > 0, axis=1)
     if ladder.specs:
@@ -276,9 +484,17 @@ def ppermute_min_block(
                 par = block_d[jnp.clip(ids_d[:cap], 0, s - 1)]
                 return fmt.pack(ids_d, count_d, payload=par)
 
-            words, meta = jax.vmap(pack_one)(ids, counts, block)
-            r_words = ex.ppermute(words, perm, fmt=fmt.name)
+            words, meta = jax.vmap(pack_one)(ids, counts, flat)
+            if b > 1:
+                meta = pack_plane_meta(meta[:, 0], meta[:, 1]).reshape(nb, b)
+            words = words.reshape(nb, b, fmt.data_words)
+            r_words = ex.ppermute(words, perm, fmt=fmt.name).reshape(
+                nb * b, fmt.data_words
+            )
             r_meta = ex.ppermute(meta, perm, fmt=fmt.name, part="meta")
+            if b > 1:
+                cnt, exc = unpack_plane_meta(r_meta.reshape(nb * b))
+                r_meta = jnp.stack([cnt, exc], axis=1)
 
             def unpack_one(w, m):
                 u_ids, u_count, par = fmt.unpack(w, m, fill=s)
@@ -287,16 +503,16 @@ def ppermute_min_block(
                 val = jnp.where(valid, par, INF)
                 return jnp.full((s + 1,), INF, jnp.int32).at[seg].min(val)[:s]
 
-            return jax.vmap(unpack_one)(r_words, r_meta)
+            return jax.vmap(unpack_one)(r_words, r_meta).reshape(nb, b, s)
 
         return run
 
     def floor_branch(_):
         if isinstance(floor_fmt, BitmapParentFormat):
-            words = jax.vmap(floor_fmt.pack)(block)
+            words = jax.vmap(floor_fmt.pack)(flat).reshape(nb, b, -1)
             recv = ex.ppermute(words, perm, fmt=floor_fmt.name)
-            f_bits, par = jax.vmap(floor_fmt.unpack)(recv)
-            return jnp.where(f_bits, par, INF)
+            f_bits, par = jax.vmap(floor_fmt.unpack)(recv.reshape(nb * b, -1))
+            return jnp.where(f_bits, par, INF).reshape(nb, b, s)
         return ex.ppermute(block, perm, fmt=floor_fmt.name)
 
     branches = [sparse_branch(f) for f in ladder.formats()] + [floor_branch]
@@ -311,18 +527,19 @@ def ppermute_membership_block(
     *,
     gate: jax.Array,
 ):
-    """One butterfly all-gather stage: exchange a block of membership chunks.
+    """One butterfly all-gather stage: exchange a block of membership planes.
 
-    ``block``: (nb, s) bool — the chunks this rank forwards under ``perm``.
-    Returns the partner's (nb, s) bool block.  Sparse stages travel as
-    delta+PFOR16 id streams per chunk, dense stages as width-1 bitmaps (the
-    doubling block keeps chunk identity, so the merge is a plain
-    concatenation/OR into the receiver's state).
+    ``block``: (nb, b, s) bool — the ``nb`` chunks x ``b`` source planes
+    this rank forwards under ``perm``.  Returns the partner's (nb, b, s)
+    bool block.  Sparse stages travel as delta+PFOR16 id streams per
+    chunk-plane (with the one-word-per-plane packed sideband when b > 1),
+    dense stages as width-1 bitmaps (the doubling block keeps chunk
+    identity, so the merge is a plain concatenation/OR into the receiver's
+    state).
     """
-    nb, s = block.shape
-    ids, counts = jax.vmap(lambda b: bp.compact_ids(b, s, fill=s))(
-        block
-    )
+    nb, b, s = block.shape
+    flat = block.reshape(nb * b, s)
+    ids, counts = jax.vmap(lambda x: bp.compact_ids(x, s, fill=s))(flat)
     gaps = jax.vmap(bpref.gaps_from_sorted)(ids, counts)
     exc_counts = jnp.sum((gaps >> 16) > 0, axis=1)
     if ladder.specs:
@@ -336,8 +553,16 @@ def ppermute_membership_block(
 
         def run(_):
             words, meta = jax.vmap(fmt.pack)(ids, counts)
-            r_words = ex.ppermute(words, perm, fmt=fmt.name)
+            if b > 1:
+                meta = pack_plane_meta(meta[:, 0], meta[:, 1]).reshape(nb, b)
+            words = words.reshape(nb, b, fmt.data_words)
+            r_words = ex.ppermute(words, perm, fmt=fmt.name).reshape(
+                nb * b, fmt.data_words
+            )
             r_meta = ex.ppermute(meta, perm, fmt=fmt.name, part="meta")
+            if b > 1:
+                cnt, exc = unpack_plane_meta(r_meta.reshape(nb * b))
+                r_meta = jnp.stack([cnt, exc], axis=1)
 
             def unpack_one(w, m):
                 u_ids, u_count, _ = fmt.unpack(w, m, fill=s)
@@ -345,15 +570,15 @@ def ppermute_membership_block(
                 seg = jnp.where(valid, u_ids[:cap], s)
                 return jnp.zeros((s + 1,), bool).at[seg].set(True)[:s]
 
-            return jax.vmap(unpack_one)(r_words, r_meta)
+            return jax.vmap(unpack_one)(r_words, r_meta).reshape(nb, b, s)
 
         return run
 
     def bitmap_branch(_):
         fmt = BitmapFormat(s)
-        words = jax.vmap(fmt.pack)(block)
+        words = jax.vmap(fmt.pack)(flat).reshape(nb, b, -1)
         recv = ex.ppermute(words, perm, fmt=fmt.name)
-        return jax.vmap(fmt.unpack)(recv)
+        return jax.vmap(fmt.unpack)(recv.reshape(nb * b, -1)).reshape(nb, b, s)
 
     branches = [sparse_branch(f) for f in ladder.formats()] + [bitmap_branch]
     return ex.dispatch(my_bucket, branches)

@@ -49,12 +49,33 @@ class AdaptiveExchange:
     group_size: int
     ladder: BucketLadder | None = None  # None -> single fixed format
     stats: CommStats | None = None
+    #: number of multi-source frontier planes riding this site's payloads.
+    #: With planes > 1 every payload collective is attributed per plane under
+    #: sub-zones ``{phase}@p{k}`` (the plane shares divide exactly — every
+    #: plane contributes the same word count), while the bucket-consensus
+    #: all-reduce stays under the base phase: ONE consensus round serves all
+    #: B planes, which is precisely the amortization the ledger must show.
+    planes: int = 1
 
     # -- recording collective primitives ------------------------------------
 
     def _rec(self, fmt: str, kind: str, part: str, out: jax.Array,
-             moved: int | None = None) -> None:
-        if self.stats is not None:
+             moved: int | None = None, per_plane: bool = True) -> None:
+        if self.stats is None:
+            return
+        if self.planes > 1 and per_plane:
+            nbytes = aval_bytes(out)
+            assert nbytes % self.planes == 0, (self.phase, nbytes, self.planes)
+            share = nbytes // self.planes
+            for k in range(self.planes):
+                m = None
+                if moved is not None:
+                    m = moved // self.planes
+                    if k == self.planes - 1:  # keep the moved total exact
+                        m += moved - self.planes * (moved // self.planes)
+                self.stats.record(f"{self.phase}@p{k}", fmt, kind, part, share,
+                                  moved_bytes=m)
+        else:
             self.stats.record_aval(self.phase, fmt, kind, part, out,
                                    moved_bytes=moved)
 
@@ -74,7 +95,9 @@ class AdaptiveExchange:
 
     def pmax(self, x: jax.Array, *, fmt: str = CONSENSUS, part: str = "bucket") -> jax.Array:
         out = jax.lax.pmax(x, self.axis)
-        self._rec(fmt, "all-reduce", part, out, moved=2 * self._peer_share(out))
+        # one consensus serves every plane: never split per plane
+        self._rec(fmt, "all-reduce", part, out,
+                  moved=2 * self._peer_share(out), per_plane=False)
         return out
 
     def psum(self, x: jax.Array, *, fmt: str, part: str = "value") -> jax.Array:

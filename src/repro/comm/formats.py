@@ -120,6 +120,54 @@ def unpack_bitmap(words: jax.Array) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# plane (multi-source batch) headers: B id streams under ONE wire header
+# ---------------------------------------------------------------------------
+
+#: bits of the packed plane header that hold the id count (counts reach
+#: cap <= 2**16 inclusive, so 17 bits; the exception count, <= cap/8 <= 8192,
+#: rides in the remaining 14 bits of a non-negative int32)
+PLANE_COUNT_BITS = 17
+
+
+def plane_meta_words(b: int) -> int:
+    """Sideband words of ``b`` id streams sharing one exchange.
+
+    A single stream keeps the legacy (count, exc_count) int32 pair; batched
+    planes pack both counts of each plane into ONE word — the shared-header
+    amortization of the multi-source exchange (half the sideband per source).
+    """
+    return 2 if b == 1 else b
+
+
+def pack_plane_meta(counts: jax.Array, exc_counts: jax.Array) -> jax.Array:
+    """Per-plane (count, exc_count) int32 pairs -> one packed word per plane."""
+    return (counts | (exc_counts << PLANE_COUNT_BITS)).astype(jnp.int32)
+
+
+def unpack_plane_meta(words: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Inverse of :func:`pack_plane_meta` -> (counts, exc_counts)."""
+    mask = (1 << PLANE_COUNT_BITS) - 1
+    return words & mask, words >> PLANE_COUNT_BITS
+
+
+def plane_wire_bytes(fmt, b: int) -> int:
+    """Wire bytes of ``b`` frontier planes carried by one exchange of ``fmt``.
+
+    Dense formats (bitmap, dense vector, found-bitmap + parents, raw ids)
+    scale linearly — each plane pays its full geometry.  Id-stream formats
+    amortize the header: ``b`` data payloads share a packed one-word-per-
+    plane sideband instead of ``b`` two-word metas.  This is the single
+    byte model the device collectives, the host replay benchmark, and the
+    CI byte-model check all price plane exchanges with.
+    """
+    if b == 1:
+        return fmt.wire_bytes
+    if isinstance(fmt, IdStreamFormat):
+        return 4 * (b * fmt.data_words + plane_meta_words(b))
+    return b * fmt.wire_bytes
+
+
+# ---------------------------------------------------------------------------
 # wire-format objects
 # ---------------------------------------------------------------------------
 

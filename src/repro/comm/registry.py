@@ -79,19 +79,25 @@ register_codec("bitmap", codecs.Bitmap)
 class WirePlan:
     """Builders for one exchange mode's column/row collectives.
 
-    ``build_column(s, axis, group_size, *, policy, stats, phase)`` returns
-    ``fn(bits (s,) bool) -> (group_size*s,) bool``; ``build_row(s, axis,
-    group_size, n_c, parent_width, *, policy, stats, phase)`` returns
-    ``fn(prop (group_size, s) i32) -> (s,) i32`` (min over senders; ``n_c``
-    is the column-slice width, which sizes the packed parent payload).
+    Every builder takes a ``b`` keyword — the number of multi-source
+    frontier *planes* the exchange carries — and the built callables are
+    plane-batched: ``build_column(s, axis, group_size, *, b, policy, stats,
+    phase)`` returns ``fn(bits (b, s) bool) -> (b, group_size*s) bool``;
+    ``build_row(s, axis, group_size, n_c, parent_width, *, b, ...)``
+    returns ``fn(prop (b, group_size, s) i32) -> (b, s) i32`` (min over
+    senders per plane; ``n_c`` is the column-slice width, which sizes the
+    packed parent payload).  At ``b == 1`` the wire is byte-identical to
+    the single-source exchange; at ``b > 1`` all planes share one bucket
+    consensus and one collective pair per exchange, with id-stream
+    sidebands packed one word per plane (the shared-header amortization).
 
     The bottom-up (pull) traversal direction adds two more exchange shapes:
     ``build_row_bu(s, axis, group_size, n_c, parent_width, ...)`` returns
-    ``fn(prop (group_size, s) i32 column-LOCAL candidates) -> (s,) i32``
-    (global parents, min over senders), and ``build_unreached(s, axis,
-    group_size, ...)`` returns ``fn(bits (s,) bool) -> (group_size*s,)
-    bool`` — the unreached-membership all-gather over the grid row that
-    replaces the candidate id streams at dense levels.
+    ``fn(prop (b, group_size, s) i32 column-LOCAL candidates) -> (b, s)
+    i32`` (global parents, min over senders), and ``build_unreached(s,
+    axis, group_size, ...)`` returns ``fn(bits (b, s) bool) ->
+    (b, group_size*s) bool`` — the unreached-membership all-gather over the
+    grid row that replaces the candidate id streams at dense levels.
     """
 
     name: str
@@ -123,33 +129,46 @@ def available_wire_plans() -> list[str]:
     return sorted(_WIRE_PLANS)
 
 
-def _raw_column(s, axis, group_size, *, policy=None, stats=None, phase="bfs/column"):
-    ex = AdaptiveExchange(phase, axis, group_size, None, stats)
-    return lambda bits: cc.gather_raw_ids(ex, bits)
+def _raw_column(s, axis, group_size, *, b=1, policy=None, stats=None,
+                phase="bfs/column"):
+    ex = AdaptiveExchange(phase, axis, group_size, None, stats, planes=b)
+    if b == 1:
+        return lambda bits: cc.gather_raw_ids(ex, bits[0])[None]
+    return lambda bits: cc.gather_raw_ids_planes(ex, bits)
 
 
-def _bitmap_column(s, axis, group_size, *, policy=None, stats=None, phase="bfs/column"):
-    ex = AdaptiveExchange(phase, axis, group_size, None, stats)
-    return lambda bits: cc.gather_bitmap(ex, bits)
+def _bitmap_column(s, axis, group_size, *, b=1, policy=None, stats=None,
+                   phase="bfs/column"):
+    ex = AdaptiveExchange(phase, axis, group_size, None, stats, planes=b)
+    if b == 1:
+        return lambda bits: cc.gather_bitmap(ex, bits[0])[None]
+    return lambda bits: cc.gather_bitmap_planes(ex, bits)
 
 
-def _auto_column(s, axis, group_size, *, policy=None, stats=None, phase="bfs/column"):
+def _auto_column(s, axis, group_size, *, b=1, policy=None, stats=None,
+                 phase="bfs/column"):
     ladder = BucketLadder.default(s, policy=policy)
-    return lambda bits: cc.allgather_membership(
+    if b == 1:
+        return lambda bits: cc.allgather_membership(
+            bits[0], axis, ladder, group_size, stats=stats, phase=phase
+        )[None]
+    return lambda bits: cc.allgather_membership_planes(
         bits, axis, ladder, group_size, stats=stats, phase=phase
     )
 
 
 def _dense_row(
-    s, axis, group_size, n_c, parent_width, *, policy=None, stats=None,
+    s, axis, group_size, n_c, parent_width, *, b=1, policy=None, stats=None,
     phase="bfs/row",
 ):
-    ex = AdaptiveExchange(phase, axis, group_size, None, stats)
-    return lambda prop: cc.alltoall_dense_min(ex, prop)
+    ex = AdaptiveExchange(phase, axis, group_size, None, stats, planes=b)
+    if b == 1:
+        return lambda prop: cc.alltoall_dense_min(ex, prop[0])[None]
+    return lambda prop: cc.alltoall_dense_min_planes(ex, prop)
 
 
 def _auto_row(
-    s, axis, group_size, n_c, parent_width, *, policy=None, stats=None,
+    s, axis, group_size, n_c, parent_width, *, b=1, policy=None, stats=None,
     phase="bfs/row",
 ):
     # the row phase's dense fallback is a 32-bit candidate vector -> its own
@@ -159,82 +178,94 @@ def _auto_row(
     ladder = BucketLadder.default(
         s, floor_words=s, payload_width=parent_width, policy=policy
     )
-    return lambda prop: cc.alltoall_min_candidates(
+    if b == 1:
+        return lambda prop: cc.alltoall_min_candidates(
+            prop[0], axis, ladder, group_size, stats=stats, phase=phase, n_c=n_c
+        )[None]
+    return lambda prop: cc.alltoall_min_candidates_planes(
         prop, axis, ladder, group_size, stats=stats, phase=phase, n_c=n_c
     )
 
 
 def _btfly_row(
-    s, axis, group_size, n_c, parent_width, *, policy=None, stats=None,
+    s, axis, group_size, n_c, parent_width, *, b=1, policy=None, stats=None,
     phase="bfs/row",
 ):
     """log2(C)-stage butterfly push row phase (merge + re-bucket per hop)."""
     return butterfly.build_row_exchange(
-        s, axis, group_size, n_c, to_global=False,
+        s, axis, group_size, n_c, b=b, to_global=False,
         policy=policy, stats=stats, phase=phase,
     )
 
 
 def _btfly_row_bu(
-    s, axis, group_size, n_c, parent_width, *, policy=None, stats=None,
+    s, axis, group_size, n_c, parent_width, *, b=1, policy=None, stats=None,
     phase="bfs/row-pull",
 ):
     """Butterfly pull row phase: globalize column-local candidates, then the
     same staged min-merge as the push direction."""
     return butterfly.build_row_exchange(
-        s, axis, group_size, n_c, to_global=True,
+        s, axis, group_size, n_c, b=b, to_global=True,
         policy=policy, stats=stats, phase=phase,
     )
 
 
 def _btfly_unreached(
-    s, axis, group_size, *, policy=None, stats=None, phase="bfs/unreached"
+    s, axis, group_size, *, b=1, policy=None, stats=None, phase="bfs/unreached"
 ):
     return butterfly.build_unreached_gather(
-        s, axis, group_size, policy=policy, stats=stats, phase=phase
+        s, axis, group_size, b=b, policy=policy, stats=stats, phase=phase
     )
 
 
 def _dense_row_bu(
-    s, axis, group_size, n_c, parent_width, *, policy=None, stats=None,
+    s, axis, group_size, n_c, parent_width, *, b=1, policy=None, stats=None,
     phase="bfs/row-pull",
 ):
     """Baseline pull row exchange: globalize candidates, dense int32 wire."""
-    ex = AdaptiveExchange(phase, axis, group_size, None, stats)
+    ex = AdaptiveExchange(phase, axis, group_size, None, stats, planes=b)
 
     def run(prop):
         j = jax.lax.axis_index(axis)
         glob = jnp.where(prop < INF, j * n_c + prop, INF)
-        return cc.alltoall_dense_min(ex, glob)
+        if b == 1:
+            return cc.alltoall_dense_min(ex, glob[0])[None]
+        return cc.alltoall_dense_min_planes(ex, glob)
 
     return run
 
 
 def _bitmap_row_bu(
-    s, axis, group_size, n_c, parent_width, *, policy=None, stats=None,
+    s, axis, group_size, n_c, parent_width, *, b=1, policy=None, stats=None,
     phase="bfs/row-pull",
 ):
     """Compressed pull row exchange: found-bitmap + bit-packed parents."""
     if parent_width >= 32:  # payload would not undercut the dense vector
         return _dense_row_bu(
-            s, axis, group_size, n_c, parent_width,
+            s, axis, group_size, n_c, parent_width, b=b,
             policy=policy, stats=stats, phase=phase,
         )
     fmt = BitmapParentFormat(s, parent_width)
-    ex = AdaptiveExchange(phase, axis, group_size, None, stats)
-    return lambda prop: cc.alltoall_bitmap_min(ex, prop, fmt, n_c)
+    ex = AdaptiveExchange(phase, axis, group_size, None, stats, planes=b)
+    if b == 1:
+        return lambda prop: cc.alltoall_bitmap_min(ex, prop[0], fmt, n_c)[None]
+    return lambda prop: cc.alltoall_bitmap_min_planes(ex, prop, fmt, n_c)
 
 
-def _raw_unreached(s, axis, group_size, *, policy=None, stats=None,
+def _raw_unreached(s, axis, group_size, *, b=1, policy=None, stats=None,
                    phase="bfs/unreached"):
-    ex = AdaptiveExchange(phase, axis, group_size, None, stats)
-    return lambda bits: cc.gather_raw_ids(ex, bits)
+    ex = AdaptiveExchange(phase, axis, group_size, None, stats, planes=b)
+    if b == 1:
+        return lambda bits: cc.gather_raw_ids(ex, bits[0])[None]
+    return lambda bits: cc.gather_raw_ids_planes(ex, bits)
 
 
-def _bitmap_unreached(s, axis, group_size, *, policy=None, stats=None,
+def _bitmap_unreached(s, axis, group_size, *, b=1, policy=None, stats=None,
                       phase="bfs/unreached"):
-    ex = AdaptiveExchange(phase, axis, group_size, None, stats)
-    return lambda bits: cc.gather_bitmap(ex, bits)
+    ex = AdaptiveExchange(phase, axis, group_size, None, stats, planes=b)
+    if b == 1:
+        return lambda bits: cc.gather_bitmap(ex, bits[0])[None]
+    return lambda bits: cc.gather_bitmap_planes(ex, bits)
 
 
 register_wire_plan(

@@ -10,11 +10,20 @@ Direction optimization (Beamer, paper §3.1) is a *policy*, resolved through
 :mod:`repro.core.traversal`: ``top_down`` pushes from the frontier,
 ``bottom_up`` pulls through the packed frontier bitmap into unreached
 vertices, and ``direction_opt`` switches per level on the popcount density
-oracle.  In the vectorized formulation both directions touch all edges, so
-the *work* saving of bottom-up does not apply; what survives on TPU is the
-*representation* switch (dense bitmap vs sparse id list) which drives the
-compressed-exchange bucket choice in the distributed version.  All policies
-return identical parent/level arrays.
+oracle, anticipated one level early by the Beamer ``m_f`` edge signal (the
+degree vector is computed once before the level loop).  In the vectorized
+formulation both directions touch all edges, so the *work* saving of
+bottom-up does not apply; what survives on TPU is the *representation*
+switch (dense bitmap vs sparse id list) which drives the compressed-exchange
+bucket choice in the distributed version.  All policies return identical
+parent/level arrays.
+
+**Multi-source batches**: ``root`` may be a scalar (legacy single-source
+shapes) or a ``(B,)`` vector of sources.  Batched runs widen every carry to
+a leading plane axis — parent/level/frontier become ``(B, n)``, the
+direction flag becomes per-source — and the level loop runs until every
+plane's frontier is empty.  Results per plane are identical to ``B``
+independent single-source runs.
 """
 
 from __future__ import annotations
@@ -24,6 +33,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import traversal
 
@@ -31,32 +41,106 @@ INF = jnp.iinfo(jnp.int32).max
 
 
 class BFSResult(NamedTuple):
-    parent: jax.Array  # (n,) int32, -1 = unreached, parent[root] = root
-    level: jax.Array  # (n,) int32, -1 = unreached
-    n_levels: jax.Array  # scalar int32
+    parent: jax.Array  # (n,) | (B, n) int32, -1 = unreached, parent[root] = root
+    level: jax.Array  # (n,) | (B, n) int32, -1 = unreached
+    n_levels: jax.Array  # scalar int32 (batched: depth of the longest plane)
 
 
 class _State(NamedTuple):
-    parent: jax.Array
-    level: jax.Array
-    frontier: jax.Array  # (n,) bool
+    parent: jax.Array  # (B, n)
+    level: jax.Array  # (B, n)
+    frontier: jax.Array  # (B, n) bool
     depth: jax.Array
-    active: jax.Array  # scalar bool
-    use_bu: jax.Array  # scalar bool: next level expands bottom-up
+    active: jax.Array  # scalar bool: any plane still expanding
+    use_bu: jax.Array  # (B,) bool: plane expands bottom-up next level
+    counts: jax.Array  # (B,) int32 frontier sizes (m_f growing-guard carry)
 
 
-def _init_state(root: jax.Array, n: int, policy: traversal.TraversalPolicy) -> _State:
+def validate_roots(roots, n: int):
+    """Check root vertices (dtype, range, duplicates) -> int32 array.
+
+    Shared by ``bfs()`` and the distributed driver.  Concrete inputs fail
+    fast with a clear error instead of silently wrapping around in the
+    ``parent.at[root]`` scatter; traced values (calls from inside ``jit``)
+    skip the value checks but keep the shape/dtype contract.
+    """
+    if isinstance(roots, jax.core.Tracer):
+        if roots.ndim > 1:
+            raise ValueError(f"roots must be a scalar or (B,) vector, got "
+                             f"shape {roots.shape}")
+        if not jnp.issubdtype(roots.dtype, jnp.integer):
+            raise TypeError(f"roots must be integers, got {roots.dtype}")
+        if roots.ndim == 1 and roots.shape[0] == 0:  # static even when traced
+            raise ValueError("roots must name at least one source vertex")
+        return roots.astype(jnp.int32)
+    arr = np.asarray(roots)
+    if arr.ndim > 1:
+        raise ValueError(f"roots must be a scalar or (B,) vector, got "
+                         f"shape {arr.shape}")
+    if not np.issubdtype(arr.dtype, np.integer):
+        raise TypeError(f"roots must be integers, got {arr.dtype}")
+    if arr.size == 0:
+        raise ValueError("roots must name at least one source vertex")
+    if arr.min(initial=0) < 0 or arr.max(initial=0) >= n:
+        bad = arr[(arr < 0) | (arr >= n)]
+        raise ValueError(
+            f"roots out of range [0, {n}): {np.atleast_1d(bad)[:8].tolist()}"
+        )
+    if arr.ndim == 1 and np.unique(arr).size != arr.size:
+        vals, counts = np.unique(arr, return_counts=True)
+        raise ValueError(
+            f"duplicate roots in batch: {vals[counts > 1][:8].tolist()} "
+            "(each source plane must have a distinct root)"
+        )
+    return jnp.asarray(arr, jnp.int32)
+
+
+def hub_roots(degrees, n_roots: int) -> np.ndarray:
+    """The ``n_roots`` highest-degree vertices (stable order, argmax first).
+
+    The one root-selection convention for multi-source batches: hub roots
+    reach the dense core at the same depth, so the B frontier trajectories
+    stay bucket-aligned and the shared-header amortization is not washed
+    out by consensus escalation across planes.  Shared by the benchmark's
+    acceptance rows (``benchmarks.bfs_comm.batch_roots``) and the example
+    driver, so their batches name the same sources.
+    """
+    order = np.argsort(-np.asarray(degrees), kind="stable")
+    return order[:n_roots].astype(np.int64)
+
+
+def _init_state(roots: jax.Array, n: int, policy: traversal.TraversalPolicy) -> _State:
+    b = roots.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    hit = idx[None, :] == roots[:, None]
     return _State(
-        parent=jnp.full((n,), -1, jnp.int32).at[root].set(root.astype(jnp.int32)),
-        level=jnp.full((n,), -1, jnp.int32).at[root].set(0),
-        frontier=jnp.zeros((n,), bool).at[root].set(True),
+        parent=jnp.where(hit, roots[:, None].astype(jnp.int32), -1),
+        level=jnp.where(hit, 0, -1).astype(jnp.int32),
+        frontier=hit,
         depth=jnp.int32(0),
         active=jnp.bool_(True),
-        use_bu=jnp.bool_(policy.starts_bottom_up),
+        use_bu=jnp.broadcast_to(jnp.bool_(policy.starts_bottom_up), (b,)),
+        counts=jnp.ones((b,), jnp.int32),
     )
 
 
 @functools.partial(jax.jit, static_argnames=("n", "policy", "max_levels"))
+def _bfs_batched(src, dst, roots, n, policy, max_levels):
+    pol = traversal.resolve(policy)
+    oracle = traversal.DensityOracle(n)
+    # anticipatory direction oracle: the degree vector is computed once
+    # before the level loop and only when the policy actually switches
+    deg = None
+    if pol.uses_top_down and pol.uses_bottom_up:
+        deg = traversal.degree_vector(src, dst, n, n)
+    out = jax.lax.while_loop(
+        lambda s: s.active & (s.depth < max_levels),
+        lambda s: traversal.level_once(src, dst, n, pol, oracle, s, deg=deg),
+        _init_state(roots, n, pol),
+    )
+    return BFSResult(parent=out.parent, level=out.level, n_levels=out.depth)
+
+
 def bfs(
     src: jax.Array,
     dst: jax.Array,
@@ -69,7 +153,9 @@ def bfs(
 
     Args:
       src/dst: (m,) int32 edge endpoints; entries equal to ``n`` are padding.
-      root: scalar int32 source vertex.
+      root: scalar int32 source vertex, or a ``(B,)`` batch of distinct
+        sources — batched runs return ``(B, n)`` parent/level planes, each
+        identical to the corresponding single-source run.
       n: vertex count (static).
       policy: traversal policy name (see :mod:`repro.core.traversal`).
       max_levels: depth cap on the level loop — the same guard (and the
@@ -80,17 +166,37 @@ def bfs(
         truncated run is detectable as ``n_levels == max_levels`` — raise
         the cap for legitimately high-eccentricity graphs.
     """
-    pol = traversal.resolve(policy)
-    oracle = traversal.DensityOracle(n)
-    out = jax.lax.while_loop(
-        lambda s: s.active & (s.depth < max_levels),
-        lambda s: traversal.level_once(src, dst, n, pol, oracle, s),
-        _init_state(root, n, pol),
-    )
-    return BFSResult(parent=out.parent, level=out.level, n_levels=out.depth)
+    roots = validate_roots(root, n)
+    squeeze = roots.ndim == 0
+    res = _bfs_batched(src, dst, jnp.atleast_1d(roots), n, policy, max_levels)
+    if squeeze:
+        return BFSResult(res.parent[0], res.level[0], res.n_levels)
+    return res
 
 
 @functools.partial(jax.jit, static_argnames=("n", "max_levels", "policy"))
+def _bfs_levels_batched(src, dst, roots, n, max_levels, policy):
+    pol = traversal.resolve(policy)
+    oracle = traversal.DensityOracle(n)
+    deg = None
+    if pol.uses_top_down and pol.uses_bottom_up:
+        deg = traversal.degree_vector(src, dst, n, n)
+
+    def body(state, _):
+        state = jax.lax.cond(
+            state.active,
+            lambda s: traversal.level_once(src, dst, n, pol, oracle, s, deg=deg),
+            lambda s: s._replace(active=jnp.bool_(False)),
+            state,
+        )
+        return state, jnp.sum(state.frontier.astype(jnp.int32), axis=1)
+
+    out, sizes = jax.lax.scan(
+        body, _init_state(roots, n, pol), None, length=max_levels
+    )
+    return BFSResult(parent=out.parent, level=out.level, n_levels=out.depth), sizes
+
+
 def bfs_levels(
     src: jax.Array,
     dst: jax.Array,
@@ -103,18 +209,14 @@ def bfs_levels(
 
     The ``scan`` length doubles as the depth cap: levels beyond
     ``max_levels`` are never expanded, mirroring ``bfs()``'s guard.
+    Batched roots return per-plane size columns: ``sizes[l, k]`` is plane
+    ``k``'s frontier size after level ``l+1``.
     """
-    pol = traversal.resolve(policy)
-    oracle = traversal.DensityOracle(n)
-
-    def body(state, _):
-        state = jax.lax.cond(
-            state.active,
-            lambda s: traversal.level_once(src, dst, n, pol, oracle, s),
-            lambda s: s._replace(active=jnp.bool_(False)),
-            state,
-        )
-        return state, jnp.sum(state.frontier.astype(jnp.int32))
-
-    out, sizes = jax.lax.scan(body, _init_state(root, n, pol), None, length=max_levels)
-    return BFSResult(parent=out.parent, level=out.level, n_levels=out.depth), sizes
+    roots = validate_roots(root, n)
+    squeeze = roots.ndim == 0
+    res, sizes = _bfs_levels_batched(
+        src, dst, jnp.atleast_1d(roots), n, max_levels, policy
+    )
+    if squeeze:
+        return BFSResult(res.parent[0], res.level[0], res.n_levels), sizes[:, 0]
+    return res, sizes

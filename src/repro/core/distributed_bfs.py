@@ -52,7 +52,7 @@ from jax.sharding import PartitionSpec as P
 from repro import compat
 from repro.comm import AdaptiveExchange, CommStats, ThresholdPolicy
 from repro.comm import registry as wire_registry
-from repro.core import traversal
+from repro.core import bfs, traversal
 from repro.core.csr import BlockedGraph, Partition2D
 
 INF = jnp.iinfo(jnp.int32).max
@@ -81,27 +81,31 @@ def parent_width_class(n_c: int) -> int:
 
 
 class _Carry(NamedTuple):
-    parent: jax.Array  # (s,) int32 global parent ids, -1 unreached
-    level: jax.Array  # (s,) int32
-    frontier: jax.Array  # (s,) bool
+    parent: jax.Array  # (B, s) int32 global parent ids, -1 unreached
+    level: jax.Array  # (B, s) int32
+    frontier: jax.Array  # (B, s) bool
     depth: jax.Array
-    active: jax.Array
-    use_bu: jax.Array  # scalar bool: next level expands bottom-up
+    active: jax.Array  # scalar bool: any plane still expanding
+    use_bu: jax.Array  # (B,) bool: plane expands bottom-up next level
+    counts: jax.Array  # (B,) int32 global frontier sizes (psum consensus)
 
 
 def _bfs_local(
     src_l,
     dst_l,
-    root,
+    roots,
     *,
     part: Partition2D,
     cfg: DistBFSConfig,
     stats: CommStats | None = None,
     threshold: ThresholdPolicy | None = None,
 ):
-    """Per-rank body (inside shard_map). src_l/dst_l: (1,..,1,e_cap)."""
+    """Per-rank body (inside shard_map). src_l/dst_l: (1,..,1,e_cap);
+    ``roots``: (B,) replicated source vertices — the batch dimension B is a
+    first-class axis here, carried as (B, s) planes through every phase."""
     src_l = src_l.reshape(-1)
     dst_l = dst_l.reshape(-1)
+    b = roots.shape[0]
     r, c, s = part.rows, part.cols, part.chunk
     n_r, n_c = part.n_r, part.n_c
     i = jax.lax.axis_index(cfg.row_axes)
@@ -112,6 +116,7 @@ def _bfs_local(
     perm = part.transpose_perm()
 
     policy = traversal.resolve(cfg.policy)
+    adaptive = policy.uses_top_down and policy.uses_bottom_up
     alpha = cfg.alpha
     if alpha is None:
         # direction switch at the row ladder's sparse-capacity edge: one
@@ -122,28 +127,47 @@ def _bfs_local(
     # mode selection through the unified wire-plan registry: the plan builds
     # the adaptive exchanges (ladders, formats, engine, stats) each traversal
     # direction needs at this site; unused directions build nothing, so no
-    # dead collectives reach the HLO or the CommStats ledger
+    # dead collectives reach the HLO or the CommStats ledger.  Every builder
+    # gets the plane count: B frontier planes share each exchange's header
+    # and bucket consensus.
     plan = wire_registry.wire_plan(cfg.mode)
     column_gather = plan.build_column(
-        s, cfg.row_axes, r, policy=threshold, stats=stats, phase="bfs/column"
+        s, cfg.row_axes, r, b=b, policy=threshold, stats=stats, phase="bfs/column"
     )
     row_exchange = row_exchange_bu = unreached_gather = None
     if policy.uses_top_down:
         row_exchange = plan.build_row(
-            s, cfg.col_axis, c, n_c, p_width,
+            s, cfg.col_axis, c, n_c, p_width, b=b,
             policy=threshold, stats=stats, phase="bfs/row",
         )
     if policy.uses_bottom_up:
         row_exchange_bu = plan.build_row_bu(
-            s, cfg.col_axis, c, n_c, p_width,
+            s, cfg.col_axis, c, n_c, p_width, b=b,
             policy=threshold, stats=stats, phase="bfs/row-pull",
         )
         unreached_gather = plan.build_unreached(
-            s, cfg.col_axis, c, policy=threshold, stats=stats, phase="bfs/unreached"
+            s, cfg.col_axis, c, b=b,
+            policy=threshold, stats=stats, phase="bfs/unreached",
         )
-    # non-adaptive exchanges report through the same engine facade
-    ex_transpose = AdaptiveExchange("bfs/transpose", cfg.all_axes, r * c, None, stats)
-    ex_term = AdaptiveExchange("bfs/termination", cfg.all_axes, r * c, None, stats)
+    # non-adaptive exchanges report through the same engine facade; the
+    # termination psum carries all B plane counts in one all-reduce (plus,
+    # for adaptive policies, a float32 m_f/m_u companion — same total words
+    # as stacking, but the edge dots cannot ride int32 at Graph500 scales)
+    ex_transpose = AdaptiveExchange("bfs/transpose", cfg.all_axes, r * c, None,
+                                    stats, planes=b)
+    ex_term = AdaptiveExchange("bfs/termination", cfg.all_axes, r * c, None,
+                               stats, planes=b)
+
+    deg_own = None
+    if adaptive:
+        # anticipatory direction oracle (Beamer m_f): psum the owned-degree
+        # vector ONCE before the level loop — one grid-row all-reduce whose
+        # cost is shared by every source plane — then feed the frontier
+        # edge count into the per-level direction decision
+        ex_degree = AdaptiveExchange("bfs/degree", cfg.col_axis, c, None, stats)
+        deg_slice = traversal.degree_vector(src_l, dst_l, n_c, n_r)
+        deg_row = ex_degree.psum(deg_slice, fmt="degree")
+        deg_own = jax.lax.dynamic_slice(deg_row, (j * s,), (s,))
 
     ctx = traversal.DistLevelCtx(
         src_l=src_l,
@@ -159,35 +183,50 @@ def _bfs_local(
     )
 
     idx_global = base + jnp.arange(s, dtype=jnp.int32)
-    root32 = root.astype(jnp.int32)
+    roots32 = roots.astype(jnp.int32)
 
     def level_step(carry: _Carry) -> _Carry:
-        # 1. TransposeVector
+        # 1. TransposeVector: all B frontier planes in one permute
         bits_t = ex_transpose.ppermute(carry.frontier, perm, fmt="membership")
-        # 2. column phase: assemble f_j (n_c,) membership
+        # 2. column phase: assemble f_j (B, n_c) membership planes
         f_col = column_gather(bits_t)
-        # 3+4. policy-directed local expansion + row exchange
-        reduced = policy.expand_dist(ctx, carry.parent, f_col, carry.use_bu)
-        # 5. update owned state; the popcount count feeds both the
-        # termination test and (for direction_opt) the next direction
+        # 3+4. policy-directed local expansion + row exchange (per-plane
+        # direction; planes with empty frontiers ride as masked planes)
+        reduced = policy.expand_dist(
+            ctx, carry.parent, f_col, carry.use_bu, carry.counts > 0
+        )
+        # 5. update owned state; the per-plane popcounts feed the
+        # termination test and (for direction_opt) each plane's direction
         new = (reduced < INF) & (carry.parent < 0)
-        n_new = ex_term.psum(oracle.local_count(new), fmt="termination")
+        n_new = ex_term.psum(oracle.plane_counts(new), fmt="termination")
+        m_f = m_u = None
+        if adaptive:
+            lm_f, lm_u = traversal.edge_signals(deg_own, new, carry.parent)
+            edges = ex_term.psum(
+                jnp.stack([lm_f, lm_u], axis=1), fmt="termination", part="edges"
+            )
+            m_f, m_u = edges[:, 0], edges[:, 1]
         return _Carry(
             parent=jnp.where(new, reduced, carry.parent),
             level=jnp.where(new, carry.depth + 1, carry.level),
             frontier=new,
             depth=carry.depth + 1,
-            active=(n_new > 0) & (carry.depth + 1 < cfg.max_levels),
-            use_bu=policy.next_direction(oracle, n_new, carry.use_bu),
+            active=jnp.any(n_new > 0) & (carry.depth + 1 < cfg.max_levels),
+            use_bu=policy.next_direction(oracle, n_new, carry.use_bu,
+                                         m_f=m_f, m_u=m_u,
+                                         growing=n_new > carry.counts),
+            counts=n_new,
         )
 
+    hit = idx_global[None, :] == roots32[:, None]  # (B, s)
     init = _Carry(
-        parent=jnp.where(idx_global == root32, root32, jnp.int32(-1)),
-        level=jnp.where(idx_global == root32, 0, -1).astype(jnp.int32),
-        frontier=idx_global == root32,
+        parent=jnp.where(hit, roots32[:, None], jnp.int32(-1)),
+        level=jnp.where(hit, 0, -1).astype(jnp.int32),
+        frontier=hit,
         depth=jnp.int32(0),
         active=jnp.bool_(True),
-        use_bu=jnp.bool_(policy.starts_bottom_up),
+        use_bu=jnp.broadcast_to(jnp.bool_(policy.starts_bottom_up), (b,)),
+        counts=jnp.ones((b,), jnp.int32),
     )
     out = jax.lax.while_loop(lambda s_: s_.active, level_step, init)
     return out.parent, out.level, out.depth
@@ -202,7 +241,14 @@ def build_bfs(
     threshold: ThresholdPolicy | None = None,
 ):
     """Compile the distributed BFS for a mesh. Returns fn(src_l, dst_l, root)
-    -> (parent (n,), level (n,), n_levels) with outputs sharded over all axes.
+    -> (parent, level, n_levels) with outputs sharded over all axes.
+
+    ``root`` may be a scalar source (legacy ``(n,)`` outputs) or a ``(B,)``
+    batch of distinct sources — batched calls return ``(B, n)`` parent and
+    level planes, one consensus round and one wire header per exchange
+    serving all B planes.  Roots are validated (dtype, range, duplicates)
+    before dispatch; a wrong root fails with a clear error instead of the
+    silent wraparound indexing of the ``idx == root`` scatter.
 
     ``bg`` may be a BlockedGraph (runnable) or a bare Partition2D (dry-run
     lowering against ShapeDtypeStructs).  ``stats``, if given, is filled at
@@ -226,7 +272,7 @@ def build_bfs(
         )
 
     blk_spec = P(*cfg.row_axes, cfg.col_axis, None)
-    out_spec = P(cfg.all_axes)
+    out_spec = P(None, cfg.all_axes)  # (B, n) planes, vertex axis sharded
 
     local = functools.partial(
         _bfs_local, part=part, cfg=cfg, stats=stats, threshold=threshold
@@ -237,7 +283,17 @@ def build_bfs(
         in_specs=(blk_spec, blk_spec, P()),
         out_specs=(out_spec, out_spec, P()),
     )
-    return jax.jit(mapped)
+    jitted = jax.jit(mapped)
+
+    def run(src_l, dst_l, root):
+        roots = bfs.validate_roots(root, part.n_orig)
+        squeeze = roots.ndim == 0
+        parent, level, depth = jitted(src_l, dst_l, jnp.atleast_1d(roots))
+        if squeeze:
+            return parent[0], level[0], depth
+        return parent, level, depth
+
+    return run
 
 
 def shard_blocked(mesh: Mesh, bg: BlockedGraph, cfg: DistBFSConfig | None = None):

@@ -43,6 +43,7 @@ import jax.numpy as jnp
 from repro.comm import registry as wire_registry
 from repro.comm.formats import INF, pack_bitmap
 from repro.comm.ladder import BucketLadder
+from repro.kernels.bitpack import ops as bp_ops
 from repro.kernels.popcount import ops as pc_ops
 from repro.kernels.spmv import ref as spmv_ref
 
@@ -79,27 +80,101 @@ class DensityOracle:
 
     ``local_count`` is the membership popcount over the packed bitmap —
     computed by the :mod:`repro.kernels.popcount` kernel, and the exact
-    quantity the BucketLadder thresholds on for the wire representation.
-    ``next_direction`` applies alpha/beta hysteresis on the same count.
+    quantity the BucketLadder thresholds on for the wire representation;
+    ``plane_counts`` is its multi-source form (one kernel call over all B
+    frontier planes).  ``next_direction`` applies alpha/beta hysteresis on
+    the same count, per plane, and accepts the *anticipatory* Beamer signal:
+    ``m_f`` (edges incident to the frontier) against ``m_u`` (edges incident
+    to still-unreached vertices).  A hub entering the frontier blows up
+    ``m_f`` one level before the vertex count crosses ``alpha * n``, so the
+    edge rule ``alpha_mf * m_f > m_u`` catches the dense level one step
+    earlier than the popcount alone (Beamer et al. SC'12, alpha = 14).
     """
 
     n: int  # vertex count the density is measured against
     alpha: float = 0.25  # switch to bottom-up above this frontier density
     beta: float = 0.05  # fall back to top-down below this density
+    alpha_mf: float = 14.0  # Beamer edge heuristic: enter pull when
+    #                         alpha_mf * m_f > m_u (m_f from the degree dot)
 
     def local_count(self, bits: jax.Array) -> jax.Array:
         """Frontier size via the popcount kernel over the packed bitmap."""
         words = pack_bitmap(_pad_to_chunk(bits))
         return jnp.sum(pc_ops.popcount_blocks(words)).astype(jnp.int32)
 
-    def next_direction(self, count, was_bottom_up):
-        """Hysteresis: enter pull above alpha*n, leave below beta*n."""
+    def plane_counts(self, bits: jax.Array) -> jax.Array:
+        """Per-plane frontier sizes of ``(B, n)`` membership planes.
+
+        One plane-blocked popcount kernel call covers every source: the
+        planes pack through :func:`repro.kernels.bitpack.ops.pack_planes`
+        (chunk-aligned flattening) and reduce through ``popcount_planes``.
+        """
+        b, n = bits.shape
+        pad = (-n) % 1024
+        if pad:
+            bits = jnp.concatenate(
+                [bits, jnp.zeros((b, pad), bits.dtype)], axis=1
+            )
+        words = bp_ops.pack_planes(bits.astype(jnp.uint32), 1)
+        return pc_ops.popcount_planes(words)
+
+    def next_direction(self, count, was_bottom_up, m_f=None, m_u=None,
+                       growing=None):
+        """Hysteresis: enter pull above alpha*n (or on the Beamer edge
+        signal when ``m_f``/``m_u`` are provided), leave below beta*n.
+        Elementwise over per-source planes.
+
+        The edge rule carries Beamer's growing-frontier guard (``growing``:
+        this level's frontier outgrew the last one, SC'12's C_TB condition):
+        without it, ``m_u`` collapsing toward zero on the sparse tail of a
+        deep traversal makes ``alpha_mf * m_f > m_u`` true on every level
+        and the direction flaps into the density-independent pull wire
+        where tiny packed id streams would do.
+        """
         c = jnp.asarray(count, jnp.float32)
+        enter = c > self.alpha * self.n
+        if m_f is not None:
+            edge = (
+                self.alpha_mf * jnp.asarray(m_f, jnp.float32)
+                > jnp.asarray(m_u, jnp.float32)
+            )
+            if growing is not None:
+                edge = edge & jnp.asarray(growing, bool)
+            enter = enter | edge
         return jnp.where(
             jnp.asarray(was_bottom_up, bool),
             c >= self.beta * self.n,
-            c > self.alpha * self.n,
+            enter,
         )
+
+
+def degree_vector(src, dst, n_src: int, n_dst: int) -> jax.Array:
+    """Per-destination degree of one edge block (padding excluded).
+
+    The single masked segment-sum convention behind the anticipatory
+    oracle on BOTH drivers: ``bfs`` feeds the full symmetric edge list
+    (``n_src == n_dst == n``), the distributed driver its column-local
+    block (``n_c``/``n_r`` bounds, followed by a grid-row psum) — one
+    definition, so the two m_f signals cannot drift.
+    """
+    valid = (src < n_src) & (dst < n_dst)
+    return jax.ops.segment_sum(
+        valid.astype(jnp.int32), jnp.minimum(dst, n_dst), num_segments=n_dst + 1
+    )[:n_dst]
+
+
+def edge_signals(deg, new, parent):
+    """Beamer ``(m_f, m_u)`` degree dots over ``(B, n)`` planes.
+
+    ``m_f``: edges incident to the new frontier; ``m_u``: edges incident to
+    what remains unreached after this level.  float32 — the dots reach 2m,
+    which wraps int32 at Graph500 scales, and the oracle only thresholds
+    the ratio.  Shared by both drivers so their direction decisions agree.
+    """
+    degf = deg.astype(jnp.float32)[None, :]
+    m_f = jnp.sum(jnp.where(new, degf, 0.0), axis=1)
+    m_u = jnp.sum(jnp.where((parent < 0) & ~new, degf, 0.0), axis=1)
+    return m_f, m_u
 
 
 class DistLevelCtx(NamedTuple):
@@ -108,7 +183,8 @@ class DistLevelCtx(NamedTuple):
     Built once per rank by :func:`repro.core.distributed_bfs._bfs_local`;
     the exchange callables come from the wire plan
     (:class:`repro.comm.registry.WirePlan`), so a policy never touches a
-    collective primitive directly.
+    collective primitive directly.  All exchange callables are plane-
+    batched: they carry every source plane of the batch in one collective.
     """
 
     src_l: jax.Array  # (e_cap,) column-local sources, n_c = padding
@@ -118,20 +194,24 @@ class DistLevelCtx(NamedTuple):
     s: int  # owned-chunk width
     c: int  # grid columns
     col_index: jax.Array  # this rank's grid-column index j
-    row_exchange: Callable | None  # push: (c,s) global candidates -> (s,) min
-    row_exchange_bu: Callable | None  # pull: (c,s) LOCAL candidates -> (s,) min
-    unreached_gather: Callable | None  # (s,) own unreached -> (n_r,) row slice
+    row_exchange: Callable | None  # push: (B,c,s) global candidates -> (B,s) min
+    row_exchange_bu: Callable | None  # pull: (B,c,s) LOCAL candidates -> (B,s)
+    unreached_gather: Callable | None  # (B,s) own unreached -> (B,n_r) row slice
 
 
 class TraversalPolicy:
     """One frontier-expansion direction, or a per-level switch over them.
 
-    ``propose_single`` produces the (n,) candidate-parent vector for the
-    single-device driver; ``expand_dist`` runs local expansion + the row
-    exchange inside ``shard_map`` and returns the (s,) min-reduced global
-    candidates for the owned chunk.  All policies produce *identical*
-    parent/level results — they differ in probe representation and wire
-    shape only.
+    ``propose_single`` produces the (n,) candidate-parent vector of ONE
+    source plane for the single-device driver; ``propose_batch`` lifts it
+    over the (B,) plane axis (direction_opt overrides it with one gated
+    pass per direction so no branch runs that no plane is in);
+    ``expand_dist`` runs local expansion + the row exchange inside
+    ``shard_map`` over ALL planes at once — ``parent``/``f_col`` carry a
+    leading (B,) plane axis, ``use_bu``/``active`` are per-plane flags, and
+    the result is the (B, s) min-reduced global candidates for the owned
+    chunk.  All policies produce *identical* parent/level results — they
+    differ in probe representation and wire shape only.
     """
 
     name: str = ""
@@ -142,12 +222,23 @@ class TraversalPolicy:
     def propose_single(self, src, dst, n, parent, frontier, use_bu):
         raise NotImplementedError
 
-    def expand_dist(self, ctx: DistLevelCtx, parent, f_col, use_bu):
+    def propose_batch(self, src, dst, n, parent, frontier, use_bu):
+        """Candidate planes for the single-device driver: the vmap of
+        ``propose_single`` over (B, n) carries."""
+        return jax.vmap(
+            lambda p, f, u: self.propose_single(src, dst, n, p, f, u)
+        )(parent, frontier, use_bu)
+
+    def expand_dist(self, ctx: DistLevelCtx, parent, f_col, use_bu, active):
         raise NotImplementedError
 
-    def next_direction(self, oracle: DensityOracle, count, use_bu):
-        """Direction for the next level (fixed for single-direction policies)."""
-        return jnp.bool_(self.starts_bottom_up)
+    def next_direction(self, oracle: DensityOracle, count, use_bu,
+                       m_f=None, m_u=None, growing=None):
+        """Direction for the next level (fixed for single-direction
+        policies); elementwise over the per-source count planes."""
+        return jnp.broadcast_to(
+            jnp.bool_(self.starts_bottom_up), jnp.shape(count)
+        )
 
 
 class TopDownPolicy(TraversalPolicy):
@@ -158,11 +249,19 @@ class TopDownPolicy(TraversalPolicy):
         cand = jnp.where(frontier[jnp.minimum(src, n - 1)] & (src < n), src, INF)
         return jax.ops.segment_min(cand, dst, num_segments=n + 1)[:n]
 
-    def expand_dist(self, ctx, parent, f_col, use_bu):
-        active = f_col[jnp.clip(ctx.src_l, 0, ctx.n_c - 1)] & (ctx.src_l < ctx.n_c)
-        cand = jnp.where(active, ctx.col_index * ctx.n_c + ctx.src_l, INF)
-        prop = jax.ops.segment_min(cand, ctx.dst_l, num_segments=ctx.n_r + 1)
-        return ctx.row_exchange(prop[: ctx.n_r].reshape(ctx.c, ctx.s))
+    def _propose(self, ctx, f_col):
+        """(B, n_c) frontier planes -> (B, c, s) global candidate planes."""
+
+        def one(f):
+            active = f[jnp.clip(ctx.src_l, 0, ctx.n_c - 1)] & (ctx.src_l < ctx.n_c)
+            cand = jnp.where(active, ctx.col_index * ctx.n_c + ctx.src_l, INF)
+            prop = jax.ops.segment_min(cand, ctx.dst_l, num_segments=ctx.n_r + 1)
+            return prop[: ctx.n_r].reshape(ctx.c, ctx.s)
+
+        return jax.vmap(one)(f_col)
+
+    def expand_dist(self, ctx, parent, f_col, use_bu, active):
+        return ctx.row_exchange(self._propose(ctx, f_col))
 
 
 class BottomUpPolicy(TraversalPolicy):
@@ -183,30 +282,46 @@ class BottomUpPolicy(TraversalPolicy):
         cand = jnp.where(hit & pull, src, INF)
         return jax.ops.segment_min(cand, dst, num_segments=n + 1)[:n]
 
-    def expand_dist(self, ctx, parent, f_col, use_bu):
-        # unreached membership of the whole row slice, gathered as bitmaps
-        # over the grid row — this replaces the id-stream ALLTOALLV sizing
-        unreached = ctx.unreached_gather(parent < 0)  # (n_r,) bool
-        active = (
-            f_col[jnp.clip(ctx.src_l, 0, ctx.n_c - 1)]
-            & (ctx.src_l < ctx.n_c)
-            & unreached[jnp.clip(ctx.dst_l, 0, ctx.n_r - 1)]
-            & (ctx.dst_l < ctx.n_r)
-        )
-        # candidates stay column-LOCAL so the wire payload bit-packs at the
-        # static column-width class; the receiver globalizes per sender
-        cand = jnp.where(active, ctx.src_l, INF)
-        prop = jax.ops.segment_min(cand, ctx.dst_l, num_segments=ctx.n_r + 1)
-        return ctx.row_exchange_bu(prop[: ctx.n_r].reshape(ctx.c, ctx.s))
+    def expand_dist(self, ctx, parent, f_col, use_bu, active):
+        # unreached membership of the whole row slice, gathered as bitmap
+        # planes over the grid row — this replaces the id-stream ALLTOALLV.
+        # Exhausted planes are masked reached: their permanent unreached set
+        # (often most of the graph) must not escalate the bucket consensus
+        # the surviving planes' gather pays for, and the host replay prices
+        # inactive planes as empty.
+        unreached = ctx.unreached_gather(
+            (parent < 0) & active[:, None]
+        )  # (B, n_r) bool
+
+        def one(f, un):
+            act = (
+                f[jnp.clip(ctx.src_l, 0, ctx.n_c - 1)]
+                & (ctx.src_l < ctx.n_c)
+                & un[jnp.clip(ctx.dst_l, 0, ctx.n_r - 1)]
+                & (ctx.dst_l < ctx.n_r)
+            )
+            # candidates stay column-LOCAL so the wire payload bit-packs at
+            # the static column-width class; the receiver globalizes per
+            # sender
+            cand = jnp.where(act, ctx.src_l, INF)
+            prop = jax.ops.segment_min(cand, ctx.dst_l, num_segments=ctx.n_r + 1)
+            return prop[: ctx.n_r].reshape(ctx.c, ctx.s)
+
+        return ctx.row_exchange_bu(jax.vmap(one)(f_col, unreached))
 
 
 class DirectionOptPolicy(TraversalPolicy):
-    """Beamer-style per-level switch between push and pull.
+    """Beamer-style per-level switch between push and pull, per source.
 
-    The direction flag lives in the level-loop carry; both branches are in
-    the traced program (``lax.cond``) and the flag is group-uniform because
-    it derives from the globally ``psum``-ed frontier count — the same
-    consensus shape the AdaptiveExchange uses for bucket dispatch.
+    The per-plane direction flags live in the level-loop carry; both
+    branches are in the traced program (``lax.cond``) and the flags are
+    group-uniform because they derive from the globally ``psum``-ed
+    per-plane frontier counts — the same consensus shape the
+    AdaptiveExchange uses for bucket dispatch.  Each source plane switches
+    independently: planes routed to the direction a branch does not serve
+    ride it as masked (empty) planes, and a branch whose plane set is empty
+    is skipped entirely at run time (its collectives still lower, so the
+    CommStats ledger and HLO stay 1:1).
     """
 
     name = "direction_opt"
@@ -225,37 +340,102 @@ class DirectionOptPolicy(TraversalPolicy):
             operand=None,
         )
 
-    def expand_dist(self, ctx, parent, f_col, use_bu):
-        return jax.lax.cond(
-            use_bu,
-            lambda _: self._bu.expand_dist(ctx, parent, f_col, use_bu),
-            lambda _: self._td.expand_dist(ctx, parent, f_col, use_bu),
-            operand=None,
+    def propose_batch(self, src, dst, n, parent, frontier, use_bu):
+        # mirror expand_dist: ONE gated pass per direction over all planes.
+        # Vmapping propose_single would turn its lax.cond into a select
+        # that runs both O(m) expansions every level — even for a scalar
+        # root.  Planes routed to the direction a pass does not serve ride
+        # it masked-empty, as in the distributed exchange.
+        b = parent.shape[0]
+        act = jnp.any(frontier, axis=1)
+        td_mask = (~use_bu) & act
+        bu_mask = use_bu & act
+        inf_planes = lambda: jnp.full((b, n), INF, jnp.int32)  # noqa: E731
+        td = jax.lax.cond(
+            jnp.any(td_mask),
+            lambda: self._td.propose_batch(
+                src, dst, n, parent, frontier & td_mask[:, None], use_bu
+            ),
+            inf_planes,
         )
+        # pull planes in push mode are masked reached so the pull pass
+        # proposes nothing for them
+        bu = jax.lax.cond(
+            jnp.any(bu_mask),
+            lambda: self._bu.propose_batch(
+                src, dst, n,
+                jnp.where(bu_mask[:, None], parent, 0),
+                frontier & bu_mask[:, None],
+                use_bu,
+            ),
+            inf_planes,
+        )
+        return jnp.minimum(td, bu)
 
-    def next_direction(self, oracle, count, use_bu):
-        return oracle.next_direction(count, use_bu)
+    def expand_dist(self, ctx, parent, f_col, use_bu, active):
+        b = parent.shape[0]
+        td_mask = (~use_bu) & active
+        bu_mask = use_bu & active
+        inf_planes = lambda: jnp.full((b, ctx.s), INF, jnp.int32)  # noqa: E731
+        td = jax.lax.cond(
+            jnp.any(td_mask),
+            lambda: self._td.expand_dist(
+                ctx, parent, f_col & td_mask[:, None], use_bu, active
+            ),
+            inf_planes,
+        )
+        # pull planes in push mode are masked reached so their unreached
+        # bitmap (and hence the pull wire's content) stays empty
+        bu = jax.lax.cond(
+            jnp.any(bu_mask),
+            lambda: self._bu.expand_dist(
+                ctx,
+                jnp.where(bu_mask[:, None], parent, 0),
+                f_col & bu_mask[:, None],
+                use_bu,
+                active,
+            ),
+            inf_planes,
+        )
+        return jnp.minimum(td, bu)
+
+    def next_direction(self, oracle, count, use_bu, m_f=None, m_u=None,
+                       growing=None):
+        return oracle.next_direction(count, use_bu, m_f=m_f, m_u=m_u,
+                                     growing=growing)
 
 
-def level_once(src, dst, n, policy: TraversalPolicy, oracle: DensityOracle, state):
-    """One single-device BFS level: policy proposal + state update.
+def level_once(src, dst, n, policy: TraversalPolicy, oracle: DensityOracle,
+               state, deg=None):
+    """One single-device BFS level over every source plane.
 
     The single shared implementation behind both ``bfs()`` and
     ``bfs_levels()`` — ``state`` is any NamedTuple with parent / level /
-    frontier / depth / active / use_bu fields.
+    frontier (all ``(B, n)``) / depth / active / use_bu / counts (``(B,)``)
+    fields.  The policy proposal runs plane-batched (``propose_batch``);
+    the per-plane popcounts come from one plane-blocked kernel call.
+    ``deg``, if given, is the (n,) degree vector feeding the anticipatory
+    Beamer ``m_f`` signal (gated on a growing frontier, via the counts
+    carry) into the per-plane direction decision.
     """
-    proposed = policy.propose_single(
+    proposed = policy.propose_batch(
         src, dst, n, state.parent, state.frontier, state.use_bu
     )
     new = (proposed < INF) & (state.parent < 0)
-    count = oracle.local_count(new)
+    counts = oracle.plane_counts(new)
+    m_f = m_u = growing = None
+    if deg is not None:
+        m_f, m_u = edge_signals(deg, new, state.parent)
+        growing = counts > state.counts
     return state._replace(
         parent=jnp.where(new, proposed, state.parent),
         level=jnp.where(new, state.depth + 1, state.level),
         frontier=new,
         depth=state.depth + 1,
-        active=count > 0,
-        use_bu=policy.next_direction(oracle, count, state.use_bu),
+        active=jnp.any(counts > 0),
+        use_bu=policy.next_direction(oracle, counts, state.use_bu,
+                                     m_f=m_f, m_u=m_u, growing=growing),
+        counts=counts,
     )
 
 

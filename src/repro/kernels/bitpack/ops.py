@@ -29,6 +29,26 @@ def unpack(words: jax.Array, b: int) -> jax.Array:
     return ref.unpack(words, b)
 
 
+def pack_planes(values: jax.Array, b: int) -> jax.Array:
+    """Pack a ``(B, n)`` plane matrix at width ``b`` -> ``(B, n*b/32)`` words.
+
+    The vertical layout packs independent 1024-value chunks, so a
+    chunk-aligned plane axis flattens losslessly: the Pallas kernel blocks
+    over ``B x words`` in one grid instead of one launch per source plane.
+    Requires ``n % 1024 == 0`` (every wire-format plane is chunk-aligned).
+    """
+    nplanes, n = values.shape
+    assert n % ref.CHUNK == 0, (nplanes, n)
+    return pack(values.reshape(-1), b).reshape(nplanes, -1)
+
+
+def unpack_planes(words: jax.Array, b: int) -> jax.Array:
+    """Inverse of :func:`pack_planes`: ``(B, W)`` words -> ``(B, W*32/b)``."""
+    nplanes, w = words.shape
+    assert (w * 32 // b) % ref.CHUNK == 0, (nplanes, w, b)
+    return unpack(words.reshape(-1), b).reshape(nplanes, -1)
+
+
 def pack_sorted_ids(ids: jax.Array, count: jax.Array, b: int) -> jax.Array:
     """Delta + pack a sorted id stream (paper's frontier codec)."""
     return pack(ref.gaps_from_sorted(ids, count), b)

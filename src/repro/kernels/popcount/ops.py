@@ -20,5 +20,24 @@ def popcount_blocks(words: jax.Array) -> jax.Array:
     return jnp.sum(ref.popcount_words(blocks), axis=1)
 
 
+def popcount_planes(words: jax.Array) -> jax.Array:
+    """Per-plane popcounts of a ``(B, W)`` word matrix (any ``W``: each
+    plane is zero-padded to the kernel's 1024-word block geometry).
+
+    The multi-source frontier counter: one call reduces every source plane's
+    packed bitmap, blocking the Pallas grid over ``B x words`` instead of
+    looping the single-plane kernel per source.
+    """
+    b, w = words.shape
+    pad = (-w) % popcount.WORDS_PER_BLOCK
+    if pad:
+        words = jnp.concatenate(
+            [words, jnp.zeros((b, pad), words.dtype)], axis=1
+        )
+    if jax.default_backend() == "tpu":
+        return jnp.sum(popcount.popcount_planes_pallas(words), axis=1)
+    return jnp.sum(ref.popcount_words(words), axis=1)
+
+
 popcount_words = ref.popcount_words
 popcount_total = ref.popcount_total

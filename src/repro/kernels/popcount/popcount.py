@@ -44,3 +44,33 @@ def popcount_blocks_pallas(words: jax.Array, interpret: bool | None = None) -> j
         out_shape=jax.ShapeDtypeStruct((grid,), jnp.int32),
         interpret=interpret,
     )(w2)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def popcount_planes_pallas(
+    words: jax.Array, interpret: bool | None = None
+) -> jax.Array:
+    """Per-(plane, 1024-word-block) popcounts of a ``(B, W)`` word matrix.
+
+    The multi-source batch axis as a leading grid dimension: the grid blocks
+    over ``B x words`` so every plane's bitmap is reduced by the same SWAR
+    kernel without a host-side loop over sources.  ``W % 1024 == 0``;
+    returns ``(B, W // 1024)`` int32 partial counts (sum axis 1 for the
+    per-plane totals).
+    """
+    interpret = resolve_interpret(interpret)
+    b, w = words.shape
+    assert w % WORDS_PER_BLOCK == 0, (b, w)
+    blocks = w // WORDS_PER_BLOCK
+    w2 = words.astype(jnp.uint32).reshape(b * w // TILE[1], TILE[1])
+    out = pl.pallas_call(
+        _popcount_kernel,
+        grid=(b, blocks),
+        in_specs=[
+            pl.BlockSpec(TILE, lambda i, j, _bl=blocks: (i * _bl + j, 0))
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i, j, _bl=blocks: (i * _bl + j,)),
+        out_shape=jax.ShapeDtypeStruct((b * blocks,), jnp.int32),
+        interpret=interpret,
+    )(w2)
+    return out.reshape(b, blocks)

@@ -30,3 +30,29 @@ def spmv_pull_min(
     ):
         return pull.spmv_pull_min_pallas(nbr, f_words, u_words, n_cols)
     return ref.spmv_pull_min(nbr, f_words, u_words, n_cols)
+
+
+def spmv_min_planes(nbr: jax.Array, f_words: jax.Array, n_cols: int) -> jax.Array:
+    """Multi-source push: (B, n_cols/32) frontier planes -> (B, n_rows)."""
+    n_rows, max_deg = nbr.shape
+    if (
+        jax.default_backend() == "tpu"
+        and n_rows % spmv.ROW_TILE == 0
+        and max_deg % spmv.DEG_CHUNK == 0
+    ):
+        return spmv.spmv_min_planes_pallas(nbr, f_words, n_cols)
+    return ref.spmv_min_planes(nbr, f_words, n_cols)
+
+
+def spmv_pull_min_planes(
+    nbr: jax.Array, f_words: jax.Array, u_words: jax.Array, n_cols: int
+) -> jax.Array:
+    """Multi-source pull: per-plane frontier AND unreached bitmaps."""
+    n_rows, max_deg = nbr.shape
+    if (
+        jax.default_backend() == "tpu"
+        and n_rows % pull.ROW_TILE == 0
+        and max_deg % pull.DEG_CHUNK == 0
+    ):
+        return pull.spmv_pull_min_planes_pallas(nbr, f_words, u_words, n_cols)
+    return ref.spmv_pull_min_planes(nbr, f_words, u_words, n_cols)

@@ -57,6 +57,67 @@ def _pull_kernel(nbr_ref, f_ref, u_ref, o_ref, *, n_cols: int):
         o_ref[...] = jnp.minimum(o_ref[...], tile_min)
 
 
+def _pull_planes_kernel(nbr_ref, f_ref, u_ref, o_ref, *, n_cols: int):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+    nbr = nbr_ref[...]  # (ROW_TILE, DEG_CHUNK) int32
+    safe = jnp.minimum(nbr, n_cols - 1)
+    within = safe % 1024
+    word_idx = (safe // 1024) * 32 + within % 32
+    shift = (within // 32).astype(jnp.uint32)
+    words = f_ref[0, word_idx]
+    hit = ((words >> shift) & jnp.uint32(1)) == 1
+    cand = jnp.where(hit & (nbr < n_cols), nbr, INF)
+    tile_min = jnp.min(cand, axis=1)  # (ROW_TILE,)
+    rows = i * ROW_TILE + jax.lax.broadcasted_iota(jnp.int32, (ROW_TILE, 1), 0)
+    r_within = rows % 1024
+    r_word = (rows // 1024) * 32 + r_within % 32
+    r_shift = (r_within // 32).astype(jnp.uint32)
+    unreached = ((u_ref[0, r_word] >> r_shift) & jnp.uint32(1)) == 1
+    tile_min = jnp.where(unreached[:, 0], tile_min, INF).reshape(1, ROW_TILE)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = tile_min
+
+    @pl.when(j > 0)
+    def _acc():
+        o_ref[...] = jnp.minimum(o_ref[...], tile_min)
+
+
+@functools.partial(jax.jit, static_argnames=("n_cols", "interpret"))
+def spmv_pull_min_planes_pallas(
+    nbr: jax.Array,
+    f_words: jax.Array,
+    u_words: jax.Array,
+    n_cols: int,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Multi-source pull expansion with a leading plane axis on both
+    bitmaps: ``f_words`` (B, n_cols/32) frontier planes, ``u_words``
+    (B, n_rows/32) unreached planes -> (B, n_rows) per-plane mins."""
+    interpret = resolve_interpret(interpret)
+    b = f_words.shape[0]
+    n_rows, max_deg = nbr.shape
+    assert n_rows % ROW_TILE == 0, n_rows
+    assert max_deg % DEG_CHUNK == 0, max_deg
+    assert n_cols % 1024 == 0 and f_words.shape == (b, n_cols // 32)
+    assert n_rows % 1024 == 0 and u_words.shape == (b, n_rows // 32)
+    grid = (b, n_rows // ROW_TILE, max_deg // DEG_CHUNK)
+    return pl.pallas_call(
+        functools.partial(_pull_planes_kernel, n_cols=n_cols),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ROW_TILE, DEG_CHUNK), lambda p, i, j: (i, j)),
+            pl.BlockSpec((1, n_cols // 32), lambda p, i, j: (p, 0)),  # resident
+            pl.BlockSpec((1, n_rows // 32), lambda p, i, j: (p, 0)),  # resident
+        ],
+        out_specs=pl.BlockSpec((1, ROW_TILE), lambda p, i, j: (p, i)),
+        out_shape=jax.ShapeDtypeStruct((b, n_rows), jnp.int32),
+        interpret=interpret,
+    )(nbr, f_words.astype(jnp.uint32), u_words.astype(jnp.uint32))
+
+
 @functools.partial(jax.jit, static_argnames=("n_cols", "interpret"))
 def spmv_pull_min_pallas(
     nbr: jax.Array,

@@ -55,6 +55,22 @@ def spmv_min(nbr: jax.Array, f_words: jax.Array, n_cols: int) -> jax.Array:
     return jnp.min(cand, axis=1)
 
 
+def spmv_min_planes(nbr: jax.Array, f_words: jax.Array, n_cols: int) -> jax.Array:
+    """Multi-source push expansion: ``f_words`` is ``(B, n_cols/32)`` packed
+    frontier planes -> ``(B, n_rows)`` per-plane min frontier neighbors."""
+    return jax.vmap(lambda fw: spmv_min(nbr, fw, n_cols))(f_words)
+
+
+def spmv_pull_min_planes(
+    nbr: jax.Array, f_words: jax.Array, u_words: jax.Array, n_cols: int
+) -> jax.Array:
+    """Multi-source pull expansion: ``(B, n_cols/32)`` frontier planes and
+    ``(B, n_rows/32)`` unreached planes -> ``(B, n_rows)`` per-plane mins."""
+    return jax.vmap(lambda fw, uw: spmv_pull_min(nbr, fw, uw, n_cols))(
+        f_words, u_words
+    )
+
+
 def spmv_pull_min(
     nbr: jax.Array, f_words: jax.Array, u_words: jax.Array, n_cols: int
 ) -> jax.Array:

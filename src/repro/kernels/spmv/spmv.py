@@ -43,6 +43,59 @@ def _spmv_kernel(nbr_ref, f_ref, o_ref, *, n_cols: int):
         o_ref[...] = jnp.minimum(o_ref[...], tile_min)
 
 
+def _spmv_planes_kernel(nbr_ref, f_ref, o_ref, *, n_cols: int):
+    j = pl.program_id(2)
+    nbr = nbr_ref[...]  # (ROW_TILE, DEG_CHUNK) int32
+    safe = jnp.minimum(nbr, n_cols - 1)
+    within = safe % 1024
+    word_idx = (safe // 1024) * 32 + within % 32
+    shift = (within // 32).astype(jnp.uint32)
+    words = f_ref[0, word_idx]  # gather from this plane's resident bitmap
+    hit = ((words >> shift) & jnp.uint32(1)) == 1
+    cand = jnp.where(hit & (nbr < n_cols), nbr, INF)
+    tile_min = jnp.min(cand, axis=1).reshape(1, ROW_TILE)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = tile_min
+
+    @pl.when(j > 0)
+    def _acc():
+        o_ref[...] = jnp.minimum(o_ref[...], tile_min)
+
+
+@functools.partial(jax.jit, static_argnames=("n_cols", "interpret"))
+def spmv_min_planes_pallas(
+    nbr: jax.Array, f_words: jax.Array, n_cols: int, interpret: bool | None = None
+) -> jax.Array:
+    """Multi-source push expansion: the grid gains a leading plane axis.
+
+    ``nbr`` (n_rows, max_deg) int32 (pad = n_cols); ``f_words`` (B, n_cols/32)
+    packed frontier planes -> (B, n_rows) int32 per-plane min frontier
+    neighbor / INF.  The neighbor tile streams once per (plane, row, degree)
+    step while the *current plane's* bitmap stays VMEM-resident — the batch
+    amortizes the frontier representation, not the edge traffic.
+    """
+    interpret = resolve_interpret(interpret)
+    b = f_words.shape[0]
+    n_rows, max_deg = nbr.shape
+    assert n_rows % ROW_TILE == 0, n_rows
+    assert max_deg % DEG_CHUNK == 0, max_deg
+    assert n_cols % 1024 == 0 and f_words.shape[1] == n_cols // 32
+    grid = (b, n_rows // ROW_TILE, max_deg // DEG_CHUNK)
+    return pl.pallas_call(
+        functools.partial(_spmv_planes_kernel, n_cols=n_cols),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ROW_TILE, DEG_CHUNK), lambda p, i, j: (i, j)),
+            pl.BlockSpec((1, n_cols // 32), lambda p, i, j: (p, 0)),  # resident
+        ],
+        out_specs=pl.BlockSpec((1, ROW_TILE), lambda p, i, j: (p, i)),
+        out_shape=jax.ShapeDtypeStruct((b, n_rows), jnp.int32),
+        interpret=interpret,
+    )(nbr, f_words.astype(jnp.uint32))
+
+
 @functools.partial(jax.jit, static_argnames=("n_cols", "interpret"))
 def spmv_min_pallas(
     nbr: jax.Array, f_words: jax.Array, n_cols: int, interpret: bool | None = None

@@ -216,37 +216,48 @@ def test_butterfly_stage_collectives_single_rank():
     assert ladder.specs, "row wire must keep sparse buckets at this geometry"
     mesh = jax.make_mesh((1,), ("x",))
     rng = np.random.default_rng(0)
-    for density in (0.001, 0.02, 0.9):
-        block_np = np.where(
-            rng.random((2, s)) < density, rng.integers(0, n, size=(2, s)),
-            np.iinfo(np.int32).max,
-        ).astype(np.int32)
+    for planes in (1, 3):  # single-source wire and a multi-source plane block
+        for density in (0.001, 0.02, 0.9):
+            block_np = np.where(
+                rng.random((2, planes, s)) < density,
+                rng.integers(0, n, size=(2, planes, s)),
+                np.iinfo(np.int32).max,
+            ).astype(np.int32)
 
-        def body(block):
-            ex = comm.AdaptiveExchange("stage", "x", 1, ladder, None)
-            return cc_new.ppermute_min_block(
-                ex, block.reshape(2, s), [(0, 0)], ladder, floor,
-                gate=jnp.bool_(True),
+            def body(block, _p=planes):
+                ex = comm.AdaptiveExchange("stage", "x", 1, ladder, None,
+                                           planes=_p)
+                return cc_new.ppermute_min_block(
+                    ex, block.reshape(2, _p, s), [(0, 0)], ladder, floor,
+                    gate=jnp.bool_(True),
+                )
+
+            f = jax.jit(
+                compat.shard_map(body, mesh=mesh, in_specs=P(), out_specs=P())
+            )
+            out = np.asarray(f(jnp.asarray(block_np)))
+            np.testing.assert_array_equal(
+                out, block_np, err_msg=f"b={planes} d={density}"
             )
 
-        f = jax.jit(compat.shard_map(body, mesh=mesh, in_specs=P(), out_specs=P()))
-        out = np.asarray(f(jnp.asarray(block_np)))
-        np.testing.assert_array_equal(out, block_np, err_msg=str(density))
+            bits_np = rng.random((2, planes, s)) < density
+            col_ladder, _ = butterfly.unreached_wire(s)
 
-        bits_np = rng.random((2, s)) < density
-        col_ladder, _ = butterfly.unreached_wire(s)
+            def body_m(bits, _p=planes):
+                ex = comm.AdaptiveExchange("stage", "x", 1, col_ladder, None,
+                                           planes=_p)
+                return cc_new.ppermute_membership_block(
+                    ex, bits.reshape(2, _p, s), [(0, 0)], col_ladder,
+                    gate=jnp.bool_(True),
+                )
 
-        def body_m(bits):
-            ex = comm.AdaptiveExchange("stage", "x", 1, col_ladder, None)
-            return cc_new.ppermute_membership_block(
-                ex, bits.reshape(2, s), [(0, 0)], col_ladder,
-                gate=jnp.bool_(True),
+            fm = jax.jit(
+                compat.shard_map(body_m, mesh=mesh, in_specs=P(), out_specs=P())
             )
-
-        fm = jax.jit(compat.shard_map(body_m, mesh=mesh, in_specs=P(), out_specs=P()))
-        np.testing.assert_array_equal(
-            np.asarray(fm(jnp.asarray(bits_np))), bits_np, err_msg=str(density)
-        )
+            np.testing.assert_array_equal(
+                np.asarray(fm(jnp.asarray(bits_np))), bits_np,
+                err_msg=f"b={planes} d={density}",
+            )
 
 
 @pytest.mark.slow

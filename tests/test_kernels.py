@@ -93,6 +93,44 @@ def test_popcount_matches_python():
     )
 
 
+def test_popcount_planes_matches_per_plane_blocks():
+    """The plane-blocked kernel (one grid over B x words) equals the
+    single-plane kernel applied per source, including the zero-padding path
+    for word counts off the 1024-word block."""
+    rng = np.random.default_rng(1)
+    words = rng.integers(0, 1 << 32, size=(3, 2048), dtype=np.uint64).astype(np.uint32)
+    per_plane = np.stack(
+        [np.asarray(popcount.popcount_blocks_pallas(jnp.asarray(p))) for p in words]
+    )
+    np.testing.assert_array_equal(
+        np.asarray(popcount.popcount_planes_pallas(jnp.asarray(words))), per_plane
+    )
+    totals = per_plane.sum(axis=1)
+    np.testing.assert_array_equal(
+        np.asarray(pcops.popcount_planes(jnp.asarray(words))), totals
+    )
+    # unaligned word count -> ops pads each plane to the block geometry
+    np.testing.assert_array_equal(
+        np.asarray(pcops.popcount_planes(jnp.asarray(words[:, :100]))),
+        np.stack([np.asarray(pcref.popcount_words(jnp.asarray(p))).sum() for p in words[:, :100]]),
+    )
+
+
+@pytest.mark.parametrize("b", [1, 16])
+def test_bitpack_planes_roundtrip(b):
+    """(B, n) plane matrices pack/unpack through the chunk-aligned flatten
+    losslessly — the layout the multi-source frontier bitmaps ride."""
+    n = 2 * bitpack.VALS_PER_BLOCK
+    rng = np.random.default_rng(b)
+    hi = 1 << b
+    vals = rng.integers(0, hi, size=(3, n), dtype=np.uint64).astype(np.uint32)
+    words = bpops.pack_planes(jnp.asarray(vals), b)
+    assert words.shape == (3, n * b // 32)
+    per_plane = np.stack([np.asarray(bpref.pack(jnp.asarray(p), b)) for p in vals])
+    np.testing.assert_array_equal(np.asarray(words), per_plane)
+    np.testing.assert_array_equal(np.asarray(bpops.unpack_planes(words, b)), vals)
+
+
 def test_compact_ids():
     mask = jnp.asarray(np.array([0, 1, 1, 0, 1, 0, 0, 1], bool))
     ids, count = bpops.compact_ids(mask, capacity=8, fill=8)

@@ -61,6 +61,42 @@ def test_spmv_pull_kernel_sweep(n_rows, max_deg, density, unreached_frac):
         )
 
 
+@pytest.mark.parametrize("density", [0.0, 0.05, 0.5])
+def test_spmv_planes_kernel_sweep(density):
+    """Multi-source expansion: the plane-blocked push/pull kernels equal the
+    single-plane oracle applied per source plane, across ref / Pallas /
+    dispatching ops entry points."""
+    n_rows, max_deg, n_cols, b = 1024, 16, 4096, 3
+    rng = np.random.default_rng(int(density * 100) + 7)
+    nbr = rng.integers(0, n_cols, size=(n_rows, max_deg)).astype(np.int32)
+    nbr[rng.random((n_rows, max_deg)) < 0.3] = n_cols  # padding
+    bits = rng.random((b, n_cols)) < density
+    unreached = rng.random((b, n_rows)) < 0.5
+    f_words = jnp.stack(
+        [bpref.pack(jnp.asarray(p.astype(np.uint32)), 1) for p in bits]
+    )
+    u_words = jnp.stack(
+        [bpref.pack(jnp.asarray(p.astype(np.uint32)), 1) for p in unreached]
+    )
+    expect_push = np.stack([_python_oracle(nbr, p, n_cols) for p in bits])
+    for fn in (ref.spmv_min_planes, spmv.spmv_min_planes_pallas, ops.spmv_min_planes):
+        np.testing.assert_array_equal(
+            np.asarray(fn(jnp.asarray(nbr), f_words, n_cols)), expect_push,
+            err_msg=str(fn),
+        )
+    expect_pull = np.where(unreached, expect_push, ref.INF)
+    for fn in (
+        ref.spmv_pull_min_planes,
+        pull.spmv_pull_min_planes_pallas,
+        ops.spmv_pull_min_planes,
+    ):
+        np.testing.assert_array_equal(
+            np.asarray(fn(jnp.asarray(nbr), f_words, u_words, n_cols)),
+            expect_pull,
+            err_msg=str(fn),
+        )
+
+
 def test_spmv_pull_all_reached_is_inf():
     """With every row reached the pull produces no candidates at all."""
     n_rows = n_cols = 1024

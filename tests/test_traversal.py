@@ -257,6 +257,7 @@ for rows, cols, mesh_shape in ((2, 2, (2, 2)), (2, 4, (2, 4))):
         else:
             want |= stages | {z.replace("row[", "row-pull[") for z in stages}
             want |= {f"bfs/unreached[btfly:{t}]" for t in range(n_stages)}
+            want |= {"bfs/degree"}  # anticipatory m_f oracle's one-time psum
         assert set(cmp.per_phase) == want, (cols, pol, sorted(cmp.per_phase))
         moved = stats.per_phase_moved()
         assert moved["bfs/transpose"] < cmp.per_phase["bfs/transpose"]
@@ -413,7 +414,7 @@ for mode in ("raw", "bitmap", "auto"):
         assert cmp.match, (mode, pol, cmp.diff())
         want = {"bfs/column", "bfs/row-pull", "bfs/transpose", "bfs/termination", "bfs/unreached"}
         if pol == "direction_opt":
-            want |= {"bfs/row"}
+            want |= {"bfs/row", "bfs/degree"}
         assert set(cmp.per_phase) == want, (mode, pol, cmp.per_phase)
 print("BU COMM STATS MATCH OK")
 """,
