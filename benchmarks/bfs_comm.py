@@ -44,7 +44,7 @@ from repro.comm import BitmapFormat, BitmapParentFormat, CommStats, DenseFormat,
 from repro.comm import butterfly
 from repro.comm.formats import plane_wire_bytes
 from repro.comm.ladder import BucketLadder
-from repro.compression import codecs, threshold
+from repro.comm import codecs, threshold
 from repro.core import bfs as bfs_core
 from repro.core import csr as csrmod
 from repro.core import traversal, validate

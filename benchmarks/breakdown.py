@@ -18,7 +18,7 @@ def run(scale: int = 13, rows: int = 2, cols: int = 2):
     import jax
     import jax.numpy as jnp
 
-    from repro.compression import collectives as cc
+    from repro.comm import formats as cc
     from repro.core import csr as csrmod, validate
     from repro.graphgen import builder, kronecker
     from repro.kernels.bitpack import ops as bp
@@ -84,10 +84,120 @@ def run(scale: int = 13, rows: int = 2, cols: int = 2):
     return zones
 
 
-def main() -> None:
+#: pure-ELL slab budget: hub blocks whose container would exceed this are
+#: recorded as skipped (the exact affordability cliff the hybrid split is
+#: for), not silently built
+ELL_SLAB_BUDGET_BYTES = 1 << 28
+
+
+def expansion_breakdown(
+    scale: int = 15, rows: int = 2, cols: int = 2, repeats: int = 5
+) -> dict:
+    """Per-level local-expansion wall time for each backend (coo/ell/hybrid).
+
+    Replays the hub-root BFS level by level on block (0, 0) of the 2D
+    partition and times each backend's *push* and *pull* expansion of the
+    real frontier — the compute half of the level the wire plans wrap.
+    Backend choice is compute-local, so this is the one benchmark axis the
+    CommStats byte tables cannot see.  A pure-ELL container whose slab
+    would blow :data:`ELL_SLAB_BUDGET_BYTES` (hub rows force the width) is
+    recorded as skipped with the offending size — the affordability cliff
+    that motivates the hybrid split.  Emitted into BENCH_comm.json as the
+    ``compute`` section.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import csr as csrmod, expand as expand_mod, validate
+    from repro.graphgen import builder, kronecker
+
+    g = builder.build_csr(kronecker.kronecker_edges(scale, seed=1), n=1 << scale)
+    bg = csrmod.partition_2d(g, rows=rows, cols=cols)
+    part = bg.part
+    root = int(np.argmax(g.degrees()))
+    level = validate.reference_bfs(g, root)
+    level_pad = np.full(part.n, -1, level.dtype)
+    level_pad[: g.n] = level
+    max_level = int(level.max())
+    src_l = jnp.asarray(bg.src_local[0, 0])
+    dst_l = jnp.asarray(bg.dst_local[0, 0])
+    col_slice = level_pad[: part.n_c]  # block (0, 0) reads column slice 0
+    row_slice = level_pad[: part.n_r]
+
+    out = {
+        "scale": scale, "rows": rows, "cols": cols, "block": [0, 0],
+        "root": root, "backends": {},
+    }
+    for name in expand_mod.BACKENDS:
+        backend = expand_mod.resolve(name)
+        if name == "ell":
+            # the exact width ell_blocked would allocate (max over ALL
+            # blocks — the hub may live in any row slice)
+            k = csrmod.ell_slab_width(bg)
+            slab_bytes = rows * cols * part.n_r * k * 4
+            if slab_bytes > ELL_SLAB_BUDGET_BYTES:
+                out["backends"][name] = {
+                    "skipped": f"pure-ELL slab would be {slab_bytes} bytes "
+                    f"(k={k} from the hub rows) — the cliff hybrid avoids",
+                    "slab_bytes": slab_bytes,
+                }
+                continue
+        extra = tuple(
+            jnp.asarray(a[0, 0]) for a in backend.block_arrays(bg)
+        )
+        block = backend.local_block(src_l, dst_l, extra, part.n_r, part.n_c)
+        push = jax.jit(lambda f, _b=backend, _blk=block: _b.push_planes(_blk, f))
+        pull = jax.jit(
+            lambda f, u, _b=backend, _blk=block: _b.pull_planes(_blk, f, u)
+        )
+        levels = []
+        for lv in range(max_level):
+            f_col = jnp.asarray(col_slice == lv)[None]
+            un = jnp.asarray((row_slice > lv) | (row_slice < 0))[None]
+            jax.block_until_ready(push(f_col))  # compile
+            t0 = time.perf_counter()
+            for _ in range(repeats):
+                jax.block_until_ready(push(f_col))
+            push_us = (time.perf_counter() - t0) / repeats * 1e6
+            jax.block_until_ready(pull(f_col, un))
+            t0 = time.perf_counter()
+            for _ in range(repeats):
+                jax.block_until_ready(pull(f_col, un))
+            pull_us = (time.perf_counter() - t0) / repeats * 1e6
+            levels.append(
+                {"level": lv, "frontier": int(np.sum(col_slice == lv)),
+                 "push_us": push_us, "pull_us": pull_us}
+            )
+        entry = {"levels": levels}
+        info = backend.describe(bg)
+        if info:
+            entry["split_k"] = info[0]["split_k"]
+            entry["padding_ratio"] = info[0]["padding_ratio"]
+        out["backends"][name] = entry
+    return out
+
+
+def print_expansion(compute: dict) -> None:
+    print("# local expansion per level, block (0,0): wall us per call")
+    print("backend,level,frontier,push_us,pull_us")
+    for name, entry in compute["backends"].items():
+        if "skipped" in entry:
+            print(f"{name},skipped,,{entry['skipped']!r},")
+            continue
+        for d in entry["levels"]:
+            print(f"{name},{d['level']},{d['frontier']},"
+                  f"{d['push_us']:.1f},{d['pull_us']:.1f}")
+
+
+def main_zones() -> None:
     print("zone,host_us_per_call")
     for k, v in run().items():
         print(f"{k},{v * 1e6:.1f}")
+
+
+def main() -> None:
+    main_zones()
+    print_expansion(expansion_breakdown())
 
 
 if __name__ == "__main__":

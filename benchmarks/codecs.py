@@ -14,7 +14,7 @@ import time
 import numpy as np
 
 from repro.comm import registry
-from repro.compression import codecs
+from repro.comm import codecs
 from repro.core import bfs as bfsmod
 from repro.graphgen import builder, kronecker, zipf
 

@@ -26,7 +26,7 @@ def run(scale: int = 14, seed: int = 1) -> dict:
     lv = np.asarray(res.level)
     sizes = np.asarray(sizes)
     out = {"scale": scale, "n": g.n, "m": g.m, "levels": []}
-    from repro.compression import codecs
+    from repro.comm import codecs
 
     oracle = traversal.DensityOracle(g.n)
     use_bu = False

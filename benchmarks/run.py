@@ -22,8 +22,9 @@ def write_bench_comm(
     table: list[dict] | None = None,
     policy_levels: dict | None = None,
     batch: dict | None = None,
+    compute: dict | None = None,
 ) -> None:
-    from benchmarks import bfs_comm
+    from benchmarks import bfs_comm, breakdown
 
     from repro.core import csr as csrmod
 
@@ -43,6 +44,8 @@ def write_bench_comm(
         batch = bfs_comm.run_batch(
             scale=scale, rows=rows, cols=cols, prebuilt=prebuilt
         )
+    if compute is None:
+        compute = breakdown.expansion_breakdown(scale=scale, rows=rows, cols=cols)
     # the multi-source rows ride the same table (batch column + per-source
     # bytes); single-source rows carry batch=1 for uniform consumers
     for r in table:
@@ -77,6 +80,9 @@ def write_bench_comm(
         # multi-source batch section: B=4 planes vs the B=1 replay of the
         # same packed-wire model (shared headers + consensus amortization)
         "batch": batch,
+        # local-expansion compute breakdown: per-level push/pull wall time
+        # per backend on the hub graph (the axis the byte tables can't see)
+        "compute": compute,
     }
     with open(path, "w") as f:
         json.dump(doc, f, indent=2)
@@ -102,6 +108,14 @@ def main() -> None:
     from benchmarks import bfs_comm, breakdown, codecs, frontier_stats, teps
 
     bench_table: list[tuple] = []  # shared with write_bench_comm below
+    compute_box: list[dict] = []  # expansion breakdown, shared the same way
+
+    def breakdown_suite() -> None:
+        breakdown.main_zones()
+        scale, rows, cols = _bench_comm_size(args.full)
+        compute = breakdown.expansion_breakdown(scale=scale, rows=rows, cols=cols)
+        breakdown.print_expansion(compute)
+        compute_box.append(compute)
 
     def bfs_comm_suite() -> None:
         scale, rows, cols = _bench_comm_size(args.full)
@@ -122,7 +136,7 @@ def main() -> None:
         ("codecs (Tables 5.4/5.5)", codecs.main),
         ("frontier_stats (Fig 5.2 / Table 5.3)", frontier_stats.main),
         ("bfs_comm (Tables 7.4/7.5)", bfs_comm_suite),
-        ("breakdown (Fig 7.3)", breakdown.main),
+        ("breakdown (Fig 7.3 + expansion backends)", breakdown_suite),
         ("teps (§2.6.3)", teps.main),
     ]
     if args.full and "scaling" not in args.skip:
@@ -151,6 +165,7 @@ def main() -> None:
             write_bench_comm(
                 args.bench_json, args.full, table=table,
                 policy_levels=policy_levels, batch=batch,
+                compute=compute_box[0] if compute_box else None,
             )
         except Exception:  # noqa: BLE001
             failures.append("bench-json")

@@ -6,6 +6,10 @@ all-to-all) executes for real, and compares the four wire plans.
 
     PYTHONPATH=src python examples/distributed_bfs.py --grid 2x2 --scale 12
 
+``--expand`` picks the local-expansion backend (coo / ell / hybrid; auto =
+hybrid with the histogram-chosen split) and prints each block's split K
+and ELL padding ratio — results are bit-identical across backends.
+
 ``--batch B`` traverses B sources at once: the frontier/parent carries
 widen to (B, s) planes and every exchange moves all B planes under one
 wire header and one bucket consensus.  The batched parents then feed a
@@ -26,6 +30,10 @@ ap.add_argument("--policy", default="top_down",
                 help="traversal direction policy (paper §3.1)")
 ap.add_argument("--batch", type=int, default=1,
                 help="number of BFS sources traversed simultaneously (B)")
+ap.add_argument("--expand", default="coo",
+                choices=["coo", "ell", "hybrid", "auto"],
+                help="local-expansion backend (auto = hybrid with the "
+                     "histogram-chosen split)")
 args = ap.parse_args()
 ROWS, COLS = (int(x) for x in args.grid.split("x"))
 os.environ.setdefault(
@@ -39,6 +47,7 @@ import jax.numpy as jnp  # noqa: E402
 from repro.core import bfs as bfsmod  # noqa: E402
 from repro.core import csr as csrmod  # noqa: E402
 from repro.core import distributed_bfs as dbfs  # noqa: E402
+from repro.core import expand as expand_mod  # noqa: E402
 from repro.core import validate  # noqa: E402
 from repro.graphgen import builder, kronecker  # noqa: E402
 
@@ -79,18 +88,25 @@ def main() -> None:
     root_arg = jnp.int32(int(roots[0])) if args.batch == 1 else jnp.asarray(roots)
     print(f"grid {ROWS}x{COLS}, n={g.n:,} (padded {bg.part.n:,}), m={g.m:,}, "
           f"chunk s={bg.part.chunk:,}, e_cap={bg.e_cap:,}, "
-          f"batch B={args.batch} roots={roots.tolist()}")
+          f"batch B={args.batch} roots={roots.tolist()} expand={args.expand}")
+    backend = expand_mod.resolve(args.expand)
+    for d in backend.describe(bg):
+        residue = (f" residue_edges={d['residue_edges']:,}"
+                   if "residue_edges" in d else "")
+        print(f"  block {tuple(d['block'])}: split_k={d['split_k']} "
+              f"ell_padding_ratio={d['padding_ratio']:.3f}{residue}")
 
     refs = {int(r): validate.reference_bfs(g, int(r)) for r in roots}
     last = None
     for mode in ("raw", "bitmap", "auto", "btfly"):
-        cfg = dbfs.DistBFSConfig(mode=mode, policy=args.policy)
+        cfg = dbfs.DistBFSConfig(mode=mode, policy=args.policy,
+                                 expand=args.expand)
         fn = dbfs.build_bfs(mesh, bg, cfg)
-        src_l, dst_l = dbfs.shard_blocked(mesh, bg, cfg)
-        parent, level, depth = fn(src_l, dst_l, root_arg)
+        blocks = dbfs.shard_blocked(mesh, bg, cfg)
+        parent, level, depth = fn(*blocks, root_arg)
         jax.block_until_ready(parent)
         t0 = time.perf_counter()
-        parent, level, depth = fn(src_l, dst_l, root_arg)
+        parent, level, depth = fn(*blocks, root_arg)
         jax.block_until_ready(parent)
         dt = time.perf_counter() - t0
         parent_np = np.atleast_2d(np.asarray(parent))[:, : g.n]

@@ -14,7 +14,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.compression import registry
+from repro.comm import registry
 from repro.core import bfs, validate
 from repro.graphgen import builder, kronecker
 
@@ -24,7 +24,7 @@ def main() -> None:
     ap.add_argument("--scale", type=int, default=13)
     ap.add_argument("--edgefactor", type=int, default=16)
     ap.add_argument("--roots", type=int, default=8, help="spec says 64")
-    ap.add_argument("--codec", default="bp128d", choices=registry.available())
+    ap.add_argument("--codec", default="bp128d", choices=registry.available_codecs())
     args = ap.parse_args()
 
     print(f"# Graph500 scale={args.scale} edgefactor={args.edgefactor}")

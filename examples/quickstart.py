@@ -9,7 +9,7 @@ the tree, and show what the compression layer does to the frontier stream.
 import numpy as np
 import jax.numpy as jnp
 
-from repro.compression import registry
+from repro.comm import registry
 from repro.core import bfs, validate
 from repro.graphgen import builder, kronecker
 

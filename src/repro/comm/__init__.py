@@ -22,9 +22,9 @@ threshold).  This subsystem owns that choice end to end:
   merge-and-recompress row/unreached exchanges (ButterFly BFS).
 
 Layering: core/distributed_bfs -> comm -> kernels (bitpack/quant).
-``repro.compression`` keeps the host-side variable-length codecs and the
-threshold model; its old ``collectives``/``registry`` modules re-export
-from here for compatibility.
+The host-side variable-length codecs (:mod:`repro.comm.codecs`) and the
+§5.4.3 break-even model (:mod:`repro.comm.threshold`) live here too; the
+old ``repro.compression`` package is a single deprecation-warning shim.
 """
 
 from repro.comm.engine import AdaptiveExchange  # noqa: F401
@@ -60,4 +60,4 @@ from repro.comm.collectives import (  # noqa: F401
 )
 from repro.comm import butterfly  # noqa: F401
 from repro.comm import registry  # noqa: F401
-from repro.compression.threshold import ThresholdPolicy  # noqa: F401
+from repro.comm.threshold import ThresholdPolicy  # noqa: F401

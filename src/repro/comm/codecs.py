@@ -11,7 +11,7 @@ include: VByte/varint (Ueno et al.'s VLQ family), a dense bitmap codec
 
 Every codec implements ``encode(np.ndarray[uint32]) -> bytes`` and
 ``decode(bytes, n) -> np.ndarray[uint32]`` and is registered with the factory
-in :mod:`repro.compression.registry` (the paper's §5.3 "Factory" pattern).
+in :mod:`repro.comm.registry` (the paper's §5.3 "Factory" pattern).
 """
 
 from __future__ import annotations

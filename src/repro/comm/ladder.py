@@ -12,7 +12,7 @@ trace time since all capacities are static):
 
 * a bucket must genuinely undercut the dense floor in wire words, and
 * it must win the modeled pack + transmit + unpack race against the dense
-  fallback under :class:`repro.compression.threshold.ThresholdPolicy` —
+  fallback under :class:`repro.comm.threshold.ThresholdPolicy` —
   on a slow-codec/fast-link platform the ladder collapses to the dense
   representation exactly as the paper's break-even predicts.
 """
@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.comm.formats import IdStreamFormat, IdStreamSpec
-from repro.compression.threshold import ThresholdPolicy
+from repro.comm.threshold import ThresholdPolicy
 from repro.kernels.bitpack import ops as bp
 from repro.kernels.bitpack import ref as bpref
 

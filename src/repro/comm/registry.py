@@ -10,9 +10,12 @@ hand-rolled fourth collective.
 
 **Traversal policies** (direction optimization, paper §3.1) are the third
 registry axis: ``top_down`` / ``bottom_up`` / ``direction_opt``, defined in
-:mod:`repro.core.traversal` and resolved here by name, so a distributed BFS
-configuration is a *policy x wire-plan* point and new exchange patterns
-(butterfly) slot in as combinations rather than bespoke drivers.
+:mod:`repro.core.traversal` and resolved here by name; **expansion
+backends** (local block storage: ``coo`` / ``ell`` / ``hybrid``, defined in
+:mod:`repro.core.expand`) are the fourth.  A distributed BFS configuration
+is a *policy x wire-plan x expansion* point, and new exchange patterns
+(butterfly) or block layouts (hybrid COO/ELL) slot in as combinations
+rather than bespoke drivers.
 
 Host codecs (variable-length, numpy — benchmarks and the host Graph500
 driver) and wire plans (static-shape, in-graph) live in the same module so
@@ -32,7 +35,7 @@ from repro.comm import collectives as cc
 from repro.comm.engine import AdaptiveExchange
 from repro.comm.formats import INF, BitmapParentFormat
 from repro.comm.ladder import BucketLadder
-from repro.compression import codecs
+from repro.comm import codecs
 
 # ---------------------------------------------------------------------------
 # host codec factory (paper §5.3 "Factory")
@@ -318,3 +321,39 @@ def traversal(name: str) -> Any:
 def available_traversals() -> list[str]:
     _ensure_builtin_traversals()
     return sorted(_TRAVERSALS)
+
+
+# ---------------------------------------------------------------------------
+# local-expansion backends (hybrid COO/ELL block storage)
+# ---------------------------------------------------------------------------
+
+_EXPANSIONS: dict[str, Any] = {}
+
+
+def register_expansion(backend: Any) -> None:
+    """Register a local-expansion backend object (must expose ``.name``)."""
+    if backend.name in _EXPANSIONS:
+        raise ValueError(f"expansion backend {backend.name!r} already registered")
+    _EXPANSIONS[backend.name] = backend
+
+
+def _ensure_builtin_expansions() -> None:
+    if not _EXPANSIONS:
+        # registers coo / ell / hybrid on import
+        import repro.core.expand  # noqa: F401
+
+
+def expansion(name: str) -> Any:
+    """Resolve an expansion backend by name (lazy-imports the built-ins)."""
+    _ensure_builtin_expansions()
+    try:
+        return _EXPANSIONS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown expansion backend {name!r}; known: {sorted(_EXPANSIONS)}"
+        ) from None
+
+
+def available_expansions() -> list[str]:
+    _ensure_builtin_expansions()
+    return sorted(_EXPANSIONS)

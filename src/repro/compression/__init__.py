@@ -1,24 +1,56 @@
-"""Communication-compression substrate (paper §5).
+"""DEPRECATED — this package was absorbed by :mod:`repro.comm`.
 
-Two layers:
+The host codecs live at :mod:`repro.comm.codecs`, the §5.4.3 break-even
+model at :mod:`repro.comm.threshold`, the codec factory inside
+:mod:`repro.comm.registry`, and the compressed collectives (with their
+wire formats and bucket ladders) across :mod:`repro.comm.collectives` /
+:mod:`repro.comm.formats` / :mod:`repro.comm.ladder`.
 
-* :mod:`repro.compression.codecs` — host (numpy) *variable-length* codecs, the
-  faithful analog of the paper's S4-BP128 / VByte / bitmap comparison
-  (Tables 5.4/5.5).  Used by benchmarks and by the host-side Graph500 driver.
-* :mod:`repro.compression.threshold` — the §5.4.3 break-even model consulted
-  by the bucket ladders in :mod:`repro.comm`.
-
-The *static-shape* in-graph collectives moved to :mod:`repro.comm` (the
-unified communication plane); ``repro.compression.collectives`` and
-``repro.compression.registry`` remain as import-compatible shims.  The
-in-graph bit-packing itself lives in :mod:`repro.kernels.bitpack`
-(Pallas TPU kernel + jnp oracle).
-
-NOTE: ``registry``/``collectives`` are intentionally NOT imported here —
-they pull in :mod:`repro.comm`, which imports back into this package
-(codecs, threshold); eager imports would make package init order circular.
-``from repro.compression import registry`` still works as a submodule
-import.
+This module is the one remaining shim: importing it warns, and the old
+submodule paths (``repro.compression.codecs`` etc.) resolve to their
+:mod:`repro.comm` homes so external imports keep working one release
+longer.  In-repo code imports :mod:`repro.comm` directly.
 """
 
-from repro.compression import codecs, threshold  # noqa: F401
+from __future__ import annotations
+
+import sys
+import types
+import warnings
+
+from repro import comm
+from repro.comm import codecs, threshold  # noqa: F401
+from repro.comm import registry as _comm_registry
+
+warnings.warn(
+    "repro.compression is deprecated; import repro.comm "
+    "(codecs / threshold / registry / collectives) instead",
+    DeprecationWarning,
+    stacklevel=2,
+)
+
+# the retired registry shim renamed the factory entry points; keep those
+# aliases alive on a proxy module so its old spelling
+# (``registry.available()`` / ``registry.register()``) survives too
+registry = types.ModuleType(f"{__name__}.registry")
+registry.__dict__.update(
+    # keep the proxy's own module identity (__name__/__spec__/__loader__
+    # etc.) so reload/introspection does not misattribute it to the real
+    # module it mirrors
+    {k: v for k, v in _comm_registry.__dict__.items() if not k.startswith("__")}
+)
+registry.__doc__ = _comm_registry.__doc__
+registry.make_codec = _comm_registry.make_codec
+registry.available = _comm_registry.available_codecs
+registry.register = _comm_registry.register_codec
+
+for _name, _mod in (
+    ("codecs", codecs),
+    # the old collectives shim re-exported the formats/ladder names too;
+    # the comm package root is the faithful superset
+    ("collectives", comm),
+    ("registry", registry),
+    ("threshold", threshold),
+):
+    sys.modules[f"{__name__}.{_name}"] = _mod
+del _name, _mod

@@ -29,12 +29,14 @@ independent single-source runs.
 from __future__ import annotations
 
 import functools
+import weakref
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import expand as expand_mod
 from repro.core import traversal
 
 INF = jnp.iinfo(jnp.int32).max
@@ -124,9 +126,53 @@ def _init_state(roots: jax.Array, n: int, policy: traversal.TraversalPolicy) -> 
     )
 
 
-@functools.partial(jax.jit, static_argnames=("n", "policy", "max_levels"))
-def _bfs_batched(src, dst, roots, n, policy, max_levels):
+_extra_cache = None  # (backend name, src ref, dst ref, n, device arrays)
+
+
+def _expansion_extra(src, dst, n: int, expand: str):
+    """Host-side backend containers for the single-device driver.
+
+    The COO backend needs nothing beyond the edge arrays; ELL/hybrid build
+    their slab/residue containers from the *concrete* edge list — calling
+    with traced arrays fails with a clear error instead of a silent
+    retrace-time rebuild.  The most recent build is cached by graph
+    identity (weakrefs, mirroring the distributed driver's container
+    cache) so a Graph500-style loop over many roots pays the O(m) numpy
+    build and the host->device transfer once.
+    """
+    global _extra_cache
+    backend = expand_mod.resolve(expand)
+    if isinstance(src, jax.core.Tracer) or isinstance(dst, jax.core.Tracer):
+        if backend.name != "coo":
+            raise TypeError(
+                f"expansion backend {expand!r} builds its block containers "
+                "from concrete edge arrays; call bfs() outside jit or use "
+                "expand='coo'"
+            )
+        return ()
+    if backend.name == "coo":
+        return ()
+    c = _extra_cache
+    if (c is not None and c[0] == backend.name and c[1]() is src
+            and c[2]() is dst and c[3] == n):
+        return c[4]
+    extra = tuple(
+        jnp.asarray(a) for a in backend.graph_arrays(np.asarray(src), np.asarray(dst), n)
+    )
+    try:
+        _extra_cache = (backend.name, weakref.ref(src), weakref.ref(dst), n, extra)
+    except TypeError:
+        pass  # plain numpy inputs are not weakref-able; skip caching
+    return extra
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n", "policy", "max_levels", "expand")
+)
+def _bfs_batched(src, dst, roots, n, policy, max_levels, expand, extra):
     pol = traversal.resolve(policy)
+    backend = expand_mod.resolve(expand)
+    block = backend.local_block(src, dst, extra, n, n)
     oracle = traversal.DensityOracle(n)
     # anticipatory direction oracle: the degree vector is computed once
     # before the level loop and only when the policy actually switches
@@ -135,7 +181,8 @@ def _bfs_batched(src, dst, roots, n, policy, max_levels):
         deg = traversal.degree_vector(src, dst, n, n)
     out = jax.lax.while_loop(
         lambda s: s.active & (s.depth < max_levels),
-        lambda s: traversal.level_once(src, dst, n, pol, oracle, s, deg=deg),
+        lambda s: traversal.level_once(src, dst, n, pol, oracle, s, deg=deg,
+                                       expand=backend, block=block),
         _init_state(roots, n, pol),
     )
     return BFSResult(parent=out.parent, level=out.level, n_levels=out.depth)
@@ -148,6 +195,7 @@ def bfs(
     n: int,
     policy: str = "top_down",
     max_levels: int = 64,
+    expand: str = "coo",
 ) -> BFSResult:
     """BFS over a symmetric COO edge list (padding edges may use src=dst=n).
 
@@ -165,18 +213,28 @@ def bfs(
         Vertices beyond the cap stay unreached (parent/level = -1); a
         truncated run is detectable as ``n_levels == max_levels`` — raise
         the cap for legitimately high-eccentricity graphs.
+      expand: local-expansion backend name (``coo`` | ``ell`` | ``hybrid``
+        | ``auto``, see :mod:`repro.core.expand`) — all backends return
+        bit-identical parent/level arrays.
     """
     roots = validate_roots(root, n)
     squeeze = roots.ndim == 0
-    res = _bfs_batched(src, dst, jnp.atleast_1d(roots), n, policy, max_levels)
+    extra = _expansion_extra(src, dst, n, expand)
+    res = _bfs_batched(
+        src, dst, jnp.atleast_1d(roots), n, policy, max_levels, expand, extra
+    )
     if squeeze:
         return BFSResult(res.parent[0], res.level[0], res.n_levels)
     return res
 
 
-@functools.partial(jax.jit, static_argnames=("n", "max_levels", "policy"))
-def _bfs_levels_batched(src, dst, roots, n, max_levels, policy):
+@functools.partial(
+    jax.jit, static_argnames=("n", "max_levels", "policy", "expand")
+)
+def _bfs_levels_batched(src, dst, roots, n, max_levels, policy, expand, extra):
     pol = traversal.resolve(policy)
+    backend = expand_mod.resolve(expand)
+    block = backend.local_block(src, dst, extra, n, n)
     oracle = traversal.DensityOracle(n)
     deg = None
     if pol.uses_top_down and pol.uses_bottom_up:
@@ -185,7 +243,8 @@ def _bfs_levels_batched(src, dst, roots, n, max_levels, policy):
     def body(state, _):
         state = jax.lax.cond(
             state.active,
-            lambda s: traversal.level_once(src, dst, n, pol, oracle, s, deg=deg),
+            lambda s: traversal.level_once(src, dst, n, pol, oracle, s, deg=deg,
+                                           expand=backend, block=block),
             lambda s: s._replace(active=jnp.bool_(False)),
             state,
         )
@@ -204,6 +263,7 @@ def bfs_levels(
     n: int,
     max_levels: int = 64,
     policy: str = "top_down",
+    expand: str = "coo",
 ) -> tuple[BFSResult, jax.Array]:
     """BFS + per-level frontier sizes (drives representation choice stats).
 
@@ -214,8 +274,9 @@ def bfs_levels(
     """
     roots = validate_roots(root, n)
     squeeze = roots.ndim == 0
+    extra = _expansion_extra(src, dst, n, expand)
     res, sizes = _bfs_levels_batched(
-        src, dst, jnp.atleast_1d(roots), n, max_levels, policy
+        src, dst, jnp.atleast_1d(roots), n, max_levels, policy, expand, extra
     )
     if squeeze:
         return BFSResult(res.parent[0], res.level[0], res.n_levels), sizes[:, 0]

@@ -19,7 +19,13 @@ import dataclasses
 
 import numpy as np
 
-from repro.graphgen.builder import CSRGraph
+from repro.graphgen.builder import (
+    CSRGraph,
+    _round_up,
+    edge_degrees,
+    ell_from_edges,
+    select_split_k,
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -88,8 +94,145 @@ class BlockedGraph:
         return int(self.src_local.shape[-1])
 
 
-def _round_up(x: int, multiple: int) -> int:
-    return -(-x // multiple) * multiple
+@dataclasses.dataclass(frozen=True)
+class ELLBlocks:
+    """Dense destination-major neighbor slabs, one per 2D block.
+
+    ``nbr[i, j]`` is the ``(n_r, k)`` ELL slab of block ``A_ij``: row ``v``
+    (row-local destination) lists its column-local frontier-side neighbors,
+    sentinel-padded with ``n_c`` (a vertex id that never hits a frontier
+    bitmap).  Shapes are static across blocks — the slab width is the max
+    over blocks, rounded to the SpMV kernel's degree chunk — so the arrays
+    shard alongside the COO edge arrays.
+    """
+
+    part: Partition2D
+    nbr: np.ndarray  # (R, C, n_r, k) int32, sentinel n_c
+    split_k: np.ndarray  # (R, C) int32 per-block degree split
+
+    @property
+    def k(self) -> int:
+        return int(self.nbr.shape[-1])
+
+    def padding_ratio(self) -> np.ndarray:
+        """(R, C) fraction of slab slots holding sentinels (ELL waste)."""
+        slots = self.nbr.shape[-2] * self.nbr.shape[-1]
+        pad = (self.nbr == self.part.n_c).sum(axis=(-2, -1))
+        return pad / slots
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridBlocks:
+    """Per-block degree-split COO/ELL storage (Bisson et al.'s hub split).
+
+    Rows with degree <= the block's ``split_k`` live in the shared-width
+    ELL slab; the hub residue keeps its edges in sentinel-padded COO arrays
+    of one static capacity, so every array shards like the flat edge
+    blocks.  ``min(slab expansion, residue expansion)`` is bit-identical to
+    the flat segment_min because each row's edges live in exactly one of
+    the two structures.
+    """
+
+    part: Partition2D
+    nbr: np.ndarray  # (R, C, n_r, k) int32, sentinel n_c
+    res_src: np.ndarray  # (R, C, r_cap) int32, sentinel n_c
+    res_dst: np.ndarray  # (R, C, r_cap) int32, sentinel n_r
+    split_k: np.ndarray  # (R, C) int32 per-block degree split
+
+    @property
+    def k(self) -> int:
+        return int(self.nbr.shape[-1])
+
+    @property
+    def r_cap(self) -> int:
+        return int(self.res_src.shape[-1])
+
+    def padding_ratio(self) -> np.ndarray:
+        """(R, C) fraction of slab slots holding sentinels (ELL waste)."""
+        slots = self.nbr.shape[-2] * self.nbr.shape[-1]
+        pad = (self.nbr == self.part.n_c).sum(axis=(-2, -1))
+        return pad / slots
+
+
+def _block_degrees(src: np.ndarray, dst: np.ndarray, part: Partition2D) -> np.ndarray:
+    return edge_degrees(src, dst, part.n_r, part.n_c)
+
+
+def ell_slab_width(bg: BlockedGraph, deg_multiple: int = 8) -> int:
+    """The slab width :func:`ell_blocked` will use: the max row degree over
+    ALL blocks, rounded to the SpMV degree chunk.  The single place the
+    pure-ELL affordability estimate lives, so memory guards (the benchmark's
+    slab budget) cannot drift from what the container actually allocates."""
+    part = bg.part
+    max_deg = max(
+        int(_block_degrees(bg.src_local[i, j], bg.dst_local[i, j], part).max(initial=0))
+        for i in range(part.rows)
+        for j in range(part.cols)
+    )
+    return _round_up(max(max_deg, 1), deg_multiple)
+
+
+def ell_blocked(bg: BlockedGraph, deg_multiple: int = 8) -> ELLBlocks:
+    """Pure-ELL containers: one slab width covering every block's heaviest
+    row — affordable only when the degree distribution is flat; hub-heavy
+    blocks want :func:`hybrid_blocked`."""
+    part = bg.part
+    r, c = part.rows, part.cols
+    k = ell_slab_width(bg, deg_multiple)
+    nbr = np.empty((r, c, part.n_r, k), np.int32)
+    for i in range(r):
+        for j in range(c):
+            slab, res_s, _ = ell_from_edges(
+                bg.src_local[i, j], bg.dst_local[i, j], part.n_r, part.n_c, k
+            )
+            assert res_s.size == 0, "pure ELL must cover every row"
+            nbr[i, j] = slab
+    return ELLBlocks(part=part, nbr=nbr, split_k=np.full((r, c), k, np.int32))
+
+
+def hybrid_blocked(
+    bg: BlockedGraph,
+    waste_budget: float = 0.5,
+    split_k: int | None = None,
+    deg_multiple: int = 8,
+    res_multiple: int = 1024,
+) -> HybridBlocks:
+    """Per-block degree-split containers built at partition time.
+
+    Each block's split ``k`` comes from its own degree histogram
+    (:func:`repro.graphgen.builder.select_split_k`, keeping ELL padding
+    waste under ``waste_budget``) unless a fixed ``split_k`` is forced; the
+    slab width and residue capacity are the max over blocks so shapes stay
+    static for ``shard_map``.
+    """
+    part = bg.part
+    r, c = part.rows, part.cols
+    ks = np.empty((r, c), np.int32)
+    for i in range(r):
+        for j in range(c):
+            deg = _block_degrees(bg.src_local[i, j], bg.dst_local[i, j], part)
+            ks[i, j] = split_k or select_split_k(deg, waste_budget, deg_multiple)
+    width = _round_up(int(ks.max(initial=1)), deg_multiple)
+    slabs = np.empty((r, c, part.n_r, width), np.int32)
+    residues = []
+    for i in range(r):
+        for j in range(c):
+            slab, res_s, res_d = ell_from_edges(
+                bg.src_local[i, j], bg.dst_local[i, j], part.n_r, part.n_c,
+                int(ks[i, j]), width=width,
+            )
+            slabs[i, j] = slab
+            residues.append((res_s, res_d))
+    r_cap = _round_up(max(max(s.size for s, _ in residues), 1), res_multiple)
+    res_src = np.full((r, c, r_cap), part.n_c, np.int32)
+    res_dst = np.full((r, c, r_cap), part.n_r, np.int32)
+    for b, (res_s, res_d) in enumerate(residues):
+        i, j = divmod(b, c)
+        res_src[i, j, : res_s.size] = res_s
+        res_dst[i, j, : res_d.size] = res_d
+    return HybridBlocks(
+        part=part, nbr=slabs, res_src=res_src, res_dst=res_dst, split_k=ks
+    )
 
 
 def padded_geometry(n: int, rows: int, cols: int,

@@ -11,10 +11,14 @@ chunk q = i*C + j of width s):
      representation is chosen per group by the bucket ladder — packed
      delta+PFOR16 id stream when sparse, width-1 bitmap when dense.
   3. **local expansion**: the traversal policy's direction — *push*
-     (top-down: masked segment_min of candidate parents over the block's
-     edges, t_i = A_ij (x) f_j) or *pull* (bottom-up: only unreached
-     destinations accumulate, gated on an unreached-bitmap all-gather over
-     the grid row).
+     (top-down: min candidate parents over the block's edges,
+     t_i = A_ij (x) f_j) or *pull* (bottom-up: only unreached destinations
+     accumulate, gated on an unreached-bitmap all-gather over the grid
+     row) — dispatched through the *expansion backend* (``cfg.expand``):
+     ``coo`` (flat segment_min over the padded edge arrays), ``ell``
+     (dense neighbor slabs through the Pallas SpMV kernels), or ``hybrid``
+     (per-block degree split; hubs stay COO).  Expansion is compute-local:
+     backend choice changes no collective and no CommStats entry.
   4. **row phase**: top-down exchanges per-destination candidate subchunks
      (ALLTOALLV + compress — ids delta-packed, parent payloads bit-packed);
      bottom-up swaps the id streams for a found-bitmap + bit-packed-parent
@@ -53,6 +57,7 @@ from repro import compat
 from repro.comm import AdaptiveExchange, CommStats, ThresholdPolicy
 from repro.comm import registry as wire_registry
 from repro.core import bfs, traversal
+from repro.core import expand as expand_mod
 from repro.core.csr import BlockedGraph, Partition2D
 
 INF = jnp.iinfo(jnp.int32).max
@@ -64,6 +69,7 @@ class DistBFSConfig:
     col_axis: str = "model"  # mesh axis spanning grid columns (C)
     mode: str = "auto"  # wire-plan name: 'raw' | 'bitmap' | 'auto' | 'btfly'
     policy: str = "top_down"  # traversal: 'top_down' | 'bottom_up' | 'direction_opt'
+    expand: str = "coo"  # local expansion: 'coo' | 'ell' | 'hybrid' | 'auto'
     alpha: float | None = None  # BU entry density; None = derive from the ladder
     beta: float = 0.05  # BU exit density (hysteresis)
     max_levels: int = 64
@@ -93,6 +99,7 @@ class _Carry(NamedTuple):
 def _bfs_local(
     src_l,
     dst_l,
+    extra,
     roots,
     *,
     part: Partition2D,
@@ -101,10 +108,14 @@ def _bfs_local(
     threshold: ThresholdPolicy | None = None,
 ):
     """Per-rank body (inside shard_map). src_l/dst_l: (1,..,1,e_cap);
-    ``roots``: (B,) replicated source vertices — the batch dimension B is a
-    first-class axis here, carried as (B, s) planes through every phase."""
+    ``extra``: the expansion backend's per-block containers (ELL slab /
+    hybrid residue), same leading singleton grid axes; ``roots``: (B,)
+    replicated source vertices — the batch dimension B is a first-class
+    axis here, carried as (B, s) planes through every phase."""
+    grid_nd = len(cfg.row_axes) + 1
     src_l = src_l.reshape(-1)
     dst_l = dst_l.reshape(-1)
+    extra = tuple(a.reshape(a.shape[grid_nd:]) for a in extra)
     b = roots.shape[0]
     r, c, s = part.rows, part.cols, part.chunk
     n_r, n_c = part.n_r, part.n_c
@@ -169,9 +180,16 @@ def _bfs_local(
         deg_row = ex_degree.psum(deg_slice, fmt="degree")
         deg_own = jax.lax.dynamic_slice(deg_row, (j * s,), (s,))
 
+    # local expansion through the backend: the block containers were built
+    # at partition time and sharded next to the COO arrays; expansion is
+    # compute-local, so backend choice cannot touch the CommStats ledger
+    # or the collectives above
+    backend = expand_mod.resolve(cfg.expand)
+    block = backend.local_block(src_l, dst_l, extra, n_r, n_c)
+
     ctx = traversal.DistLevelCtx(
-        src_l=src_l,
-        dst_l=dst_l,
+        expand=backend,
+        block=block,
         n_r=n_r,
         n_c=n_c,
         s=s,
@@ -240,8 +258,13 @@ def build_bfs(
     stats: CommStats | None = None,
     threshold: ThresholdPolicy | None = None,
 ):
-    """Compile the distributed BFS for a mesh. Returns fn(src_l, dst_l, root)
+    """Compile the distributed BFS for a mesh. Returns fn(*blocks, root)
     -> (parent, level, n_levels) with outputs sharded over all axes.
+
+    ``blocks`` are the sharded arrays :func:`shard_blocked` produced for
+    ``cfg.expand`` — ``(src_l, dst_l)`` for the COO backend (the legacy
+    signature), plus the backend's block containers (ELL slab / hybrid
+    residue) otherwise; call as ``fn(*shard_blocked(...), root)``.
 
     ``root`` may be a scalar source (legacy ``(n,)`` outputs) or a ``(B,)``
     batch of distinct sources — batched calls return ``(B, n)`` parent and
@@ -260,6 +283,7 @@ def build_bfs(
     )
     wire_registry.wire_plan(cfg.mode)  # fail on unknown modes at build time
     policy = wire_registry.traversal(cfg.policy)  # ... and unknown policies
+    backend = expand_mod.resolve(cfg.expand)  # ... and unknown backends
     part = bg if isinstance(bg, Partition2D) else bg.part
     assert part.rows == functools.reduce(
         lambda a, b: a * b, (mesh.shape[a] for a in cfg.row_axes)
@@ -272,6 +296,9 @@ def build_bfs(
         )
 
     blk_spec = P(*cfg.row_axes, cfg.col_axis, None)
+    extra_specs = tuple(
+        P(*cfg.row_axes, cfg.col_axis, *(None,) * nd) for nd in backend.extra_ndims
+    )
     out_spec = P(None, cfg.all_axes)  # (B, n) planes, vertex axis sharded
 
     local = functools.partial(
@@ -280,15 +307,25 @@ def build_bfs(
     mapped = compat.shard_map(
         local,
         mesh=mesh,
-        in_specs=(blk_spec, blk_spec, P()),
+        in_specs=(blk_spec, blk_spec, extra_specs, P()),
         out_specs=(out_spec, out_spec, P()),
     )
     jitted = jax.jit(mapped)
+    n_blocks = 2 + len(backend.extra_ndims)
 
-    def run(src_l, dst_l, root):
+    def run(*args):
+        if len(args) != n_blocks + 1:
+            raise TypeError(
+                f"expansion backend {backend.name!r} expects "
+                f"fn(*{n_blocks} block arrays, root), got {len(args)} args "
+                "— pass everything shard_blocked returned"
+            )
+        *blocks, root = args
         roots = bfs.validate_roots(root, part.n_orig)
         squeeze = roots.ndim == 0
-        parent, level, depth = jitted(src_l, dst_l, jnp.atleast_1d(roots))
+        parent, level, depth = jitted(
+            blocks[0], blocks[1], tuple(blocks[2:]), jnp.atleast_1d(roots)
+        )
         if squeeze:
             return parent[0], level[0], depth
         return parent, level, depth
@@ -297,7 +334,10 @@ def build_bfs(
 
 
 def shard_blocked(mesh: Mesh, bg: BlockedGraph, cfg: DistBFSConfig | None = None):
-    """Place the blocked edge arrays on the mesh."""
+    """Place the blocked edge arrays — and the expansion backend's block
+    containers (ELL slab / hybrid residue for ``cfg.expand``) — on the
+    mesh.  Returns ``(src, dst, *backend arrays)``; the COO default keeps
+    the legacy two-tuple."""
     cfg = cfg or DistBFSConfig(
         row_axes=tuple(mesh.axis_names[:-1]), col_axis=mesh.axis_names[-1]
     )
@@ -306,4 +346,11 @@ def shard_blocked(mesh: Mesh, bg: BlockedGraph, cfg: DistBFSConfig | None = None
     sharding = NamedSharding(mesh, spec)
     src = jax.device_put(bg.src_local.reshape(sizes + (-1,)), sharding)
     dst = jax.device_put(bg.dst_local.reshape(sizes + (-1,)), sharding)
-    return src, dst
+    backend = expand_mod.resolve(cfg.expand)
+    extra = []
+    for a, nd in zip(backend.block_arrays(bg), backend.extra_ndims):
+        tail = a.shape[2:]
+        assert len(tail) == nd, (a.shape, nd)
+        esharding = NamedSharding(mesh, P(*cfg.row_axes, cfg.col_axis, *(None,) * nd))
+        extra.append(jax.device_put(a.reshape(sizes + tail), esharding))
+    return (src, dst, *extra)

@@ -43,9 +43,9 @@ import jax.numpy as jnp
 from repro.comm import registry as wire_registry
 from repro.comm.formats import INF, pack_bitmap
 from repro.comm.ladder import BucketLadder
+from repro.core import expand as expand_mod
 from repro.kernels.bitpack import ops as bp_ops
 from repro.kernels.popcount import ops as pc_ops
-from repro.kernels.spmv import ref as spmv_ref
 
 
 def _pad_to_chunk(bits: jax.Array) -> jax.Array:
@@ -182,13 +182,15 @@ class DistLevelCtx(NamedTuple):
 
     Built once per rank by :func:`repro.core.distributed_bfs._bfs_local`;
     the exchange callables come from the wire plan
-    (:class:`repro.comm.registry.WirePlan`), so a policy never touches a
-    collective primitive directly.  All exchange callables are plane-
-    batched: they carry every source plane of the batch in one collective.
+    (:class:`repro.comm.registry.WirePlan`) and the local expansion from
+    the expansion backend (:func:`repro.comm.registry.expansion`), so a
+    policy never touches a collective primitive or a block data structure
+    directly.  All exchange callables are plane-batched: they carry every
+    source plane of the batch in one collective.
     """
 
-    src_l: jax.Array  # (e_cap,) column-local sources, n_c = padding
-    dst_l: jax.Array  # (e_cap,) row-local destinations, n_r = padding
+    expand: object  # ExpansionBackend: push_planes / pull_planes
+    block: object  # its LocalBlock (COO edges / ELL slab / hybrid split)
     n_r: int  # row-slice width (destinations per grid row)
     n_c: int  # column-slice width (sources per grid column)
     s: int  # owned-chunk width
@@ -202,16 +204,18 @@ class DistLevelCtx(NamedTuple):
 class TraversalPolicy:
     """One frontier-expansion direction, or a per-level switch over them.
 
-    ``propose_single`` produces the (n,) candidate-parent vector of ONE
-    source plane for the single-device driver; ``propose_batch`` lifts it
-    over the (B,) plane axis (direction_opt overrides it with one gated
-    pass per direction so no branch runs that no plane is in);
-    ``expand_dist`` runs local expansion + the row exchange inside
-    ``shard_map`` over ALL planes at once — ``parent``/``f_col`` carry a
-    leading (B,) plane axis, ``use_bu``/``active`` are per-plane flags, and
-    the result is the (B, s) min-reduced global candidates for the owned
-    chunk.  All policies produce *identical* parent/level results — they
-    differ in probe representation and wire shape only.
+    ``propose_batch`` produces the (B, n) candidate-parent planes for the
+    single-device driver (direction_opt runs one gated pass per direction
+    so no branch runs that no plane is in); ``expand_dist`` runs local
+    expansion + the row exchange inside ``shard_map`` over ALL planes at
+    once — ``parent``/``f_col`` carry a leading (B,) plane axis,
+    ``use_bu``/``active`` are per-plane flags, and the result is the (B, s)
+    min-reduced global candidates for the owned chunk.  Both dispatch the
+    *local* expansion through an expansion backend
+    (:mod:`repro.core.expand`): the policy owns direction, probe masking,
+    and the wire shape; the backend owns the block data structure.  All
+    (policy x backend) combinations produce *identical* parent/level
+    results — they differ in probe representation and wire shape only.
     """
 
     name: str = ""
@@ -219,15 +223,9 @@ class TraversalPolicy:
     uses_top_down: bool = True  # driver builds the push row exchange
     uses_bottom_up: bool = False  # driver builds the pull exchanges
 
-    def propose_single(self, src, dst, n, parent, frontier, use_bu):
+    def propose_batch(self, expand, block, parent, frontier, use_bu):
+        """(B, n) candidate planes for the single-device driver."""
         raise NotImplementedError
-
-    def propose_batch(self, src, dst, n, parent, frontier, use_bu):
-        """Candidate planes for the single-device driver: the vmap of
-        ``propose_single`` over (B, n) carries."""
-        return jax.vmap(
-            lambda p, f, u: self.propose_single(src, dst, n, p, f, u)
-        )(parent, frontier, use_bu)
 
     def expand_dist(self, ctx: DistLevelCtx, parent, f_col, use_bu, active):
         raise NotImplementedError
@@ -244,21 +242,19 @@ class TraversalPolicy:
 class TopDownPolicy(TraversalPolicy):
     name = "top_down"
 
-    def propose_single(self, src, dst, n, parent, frontier, use_bu):
+    def propose_batch(self, expand, block, parent, frontier, use_bu):
         # push: every frontier source proposes itself to its neighbors
-        cand = jnp.where(frontier[jnp.minimum(src, n - 1)] & (src < n), src, INF)
-        return jax.ops.segment_min(cand, dst, num_segments=n + 1)[:n]
+        return expand.push_planes(block, frontier)
 
     def _propose(self, ctx, f_col):
-        """(B, n_c) frontier planes -> (B, c, s) global candidate planes."""
+        """(B, n_c) frontier planes -> (B, c, s) global candidate planes.
 
-        def one(f):
-            active = f[jnp.clip(ctx.src_l, 0, ctx.n_c - 1)] & (ctx.src_l < ctx.n_c)
-            cand = jnp.where(active, ctx.col_index * ctx.n_c + ctx.src_l, INF)
-            prop = jax.ops.segment_min(cand, ctx.dst_l, num_segments=ctx.n_r + 1)
-            return prop[: ctx.n_r].reshape(ctx.c, ctx.s)
-
-        return jax.vmap(one)(f_col)
+        The backend returns column-LOCAL min candidates; the push wire
+        carries global ids, and min commutes with the constant shift
+        ``j * n_c``, so globalizing after the min is exact."""
+        local = ctx.expand.push_planes(ctx.block, f_col)  # (B, n_r)
+        glob = jnp.where(local < INF, ctx.col_index * ctx.n_c + local, INF)
+        return glob.reshape(-1, ctx.c, ctx.s)
 
     def expand_dist(self, ctx, parent, f_col, use_bu, active):
         return ctx.row_exchange(self._propose(ctx, f_col))
@@ -270,17 +266,12 @@ class BottomUpPolicy(TraversalPolicy):
     uses_top_down = False
     uses_bottom_up = True
 
-    def propose_single(self, src, dst, n, parent, frontier, use_bu):
-        # pull: probe the *packed* frontier bitmap (the representation
-        # switch; same vertical width-1 gather as kernels/spmv), and only
-        # unreached destinations accumulate candidates
-        n_pad = n + (-n) % 1024
-        words = pack_bitmap(_pad_to_chunk(frontier))
-        hit = spmv_ref.frontier_bit(words, src, n_pad) & (src < n)
-        unreached = parent < 0
-        pull = unreached[jnp.minimum(dst, n - 1)] & (dst < n)
-        cand = jnp.where(hit & pull, src, INF)
-        return jax.ops.segment_min(cand, dst, num_segments=n + 1)[:n]
+    def propose_batch(self, expand, block, parent, frontier, use_bu):
+        # pull: the backend probes the *packed* frontier bitmap (the
+        # representation switch; kernels/spmv's vertical width-1 gather, or
+        # spmv_pull_min itself on the ELL slab), and only unreached
+        # destinations accumulate candidates
+        return expand.pull_planes(block, frontier, parent < 0)
 
     def expand_dist(self, ctx, parent, f_col, use_bu, active):
         # unreached membership of the whole row slice, gathered as bitmap
@@ -292,22 +283,10 @@ class BottomUpPolicy(TraversalPolicy):
         unreached = ctx.unreached_gather(
             (parent < 0) & active[:, None]
         )  # (B, n_r) bool
-
-        def one(f, un):
-            act = (
-                f[jnp.clip(ctx.src_l, 0, ctx.n_c - 1)]
-                & (ctx.src_l < ctx.n_c)
-                & un[jnp.clip(ctx.dst_l, 0, ctx.n_r - 1)]
-                & (ctx.dst_l < ctx.n_r)
-            )
-            # candidates stay column-LOCAL so the wire payload bit-packs at
-            # the static column-width class; the receiver globalizes per
-            # sender
-            cand = jnp.where(act, ctx.src_l, INF)
-            prop = jax.ops.segment_min(cand, ctx.dst_l, num_segments=ctx.n_r + 1)
-            return prop[: ctx.n_r].reshape(ctx.c, ctx.s)
-
-        return ctx.row_exchange_bu(jax.vmap(one)(f_col, unreached))
+        # candidates stay column-LOCAL so the wire payload bit-packs at the
+        # static column-width class; the receiver globalizes per sender
+        local = ctx.expand.pull_planes(ctx.block, f_col, unreached)
+        return ctx.row_exchange_bu(local.reshape(-1, ctx.c, ctx.s))
 
 
 class DirectionOptPolicy(TraversalPolicy):
@@ -332,21 +311,13 @@ class DirectionOptPolicy(TraversalPolicy):
         self._td = TopDownPolicy()
         self._bu = BottomUpPolicy()
 
-    def propose_single(self, src, dst, n, parent, frontier, use_bu):
-        return jax.lax.cond(
-            use_bu,
-            lambda _: self._bu.propose_single(src, dst, n, parent, frontier, use_bu),
-            lambda _: self._td.propose_single(src, dst, n, parent, frontier, use_bu),
-            operand=None,
-        )
-
-    def propose_batch(self, src, dst, n, parent, frontier, use_bu):
+    def propose_batch(self, expand, block, parent, frontier, use_bu):
         # mirror expand_dist: ONE gated pass per direction over all planes.
-        # Vmapping propose_single would turn its lax.cond into a select
-        # that runs both O(m) expansions every level — even for a scalar
-        # root.  Planes routed to the direction a pass does not serve ride
-        # it masked-empty, as in the distributed exchange.
-        b = parent.shape[0]
+        # A per-plane lax.cond would turn into a select that runs both O(m)
+        # expansions every level — even for a scalar root.  Planes routed
+        # to the direction a pass does not serve ride it masked-empty, as
+        # in the distributed exchange.
+        b, n = parent.shape
         act = jnp.any(frontier, axis=1)
         td_mask = (~use_bu) & act
         bu_mask = use_bu & act
@@ -354,7 +325,7 @@ class DirectionOptPolicy(TraversalPolicy):
         td = jax.lax.cond(
             jnp.any(td_mask),
             lambda: self._td.propose_batch(
-                src, dst, n, parent, frontier & td_mask[:, None], use_bu
+                expand, block, parent, frontier & td_mask[:, None], use_bu
             ),
             inf_planes,
         )
@@ -363,7 +334,7 @@ class DirectionOptPolicy(TraversalPolicy):
         bu = jax.lax.cond(
             jnp.any(bu_mask),
             lambda: self._bu.propose_batch(
-                src, dst, n,
+                expand, block,
                 jnp.where(bu_mask[:, None], parent, 0),
                 frontier & bu_mask[:, None],
                 use_bu,
@@ -406,20 +377,26 @@ class DirectionOptPolicy(TraversalPolicy):
 
 
 def level_once(src, dst, n, policy: TraversalPolicy, oracle: DensityOracle,
-               state, deg=None):
+               state, deg=None, expand=None, block=None):
     """One single-device BFS level over every source plane.
 
     The single shared implementation behind both ``bfs()`` and
     ``bfs_levels()`` — ``state`` is any NamedTuple with parent / level /
     frontier (all ``(B, n)``) / depth / active / use_bu / counts (``(B,)``)
-    fields.  The policy proposal runs plane-batched (``propose_batch``);
-    the per-plane popcounts come from one plane-blocked kernel call.
-    ``deg``, if given, is the (n,) degree vector feeding the anticipatory
-    Beamer ``m_f`` signal (gated on a growing frontier, via the counts
-    carry) into the per-plane direction decision.
+    fields.  The policy proposal runs plane-batched (``propose_batch``)
+    through the local-expansion backend ``expand`` over its prepared
+    ``block`` (default: the COO backend over the flat ``src``/``dst``
+    edge arrays); the per-plane popcounts come from one plane-blocked
+    kernel call.  ``deg``, if given, is the (n,) degree vector feeding the
+    anticipatory Beamer ``m_f`` signal (gated on a growing frontier, via
+    the counts carry) into the per-plane direction decision.
     """
+    if expand is None:
+        expand = expand_mod.resolve("coo")
+    if block is None:
+        block = expand.local_block(src, dst, (), n, n)
     proposed = policy.propose_batch(
-        src, dst, n, state.parent, state.frontier, state.use_bu
+        expand, block, state.parent, state.frontier, state.use_bu
     )
     new = (proposed < INF) & (state.parent < 0)
     counts = oracle.plane_counts(new)

@@ -106,6 +106,131 @@ def relabel_by_degree(g: CSRGraph) -> tuple[CSRGraph, np.ndarray]:
     return rebuilt, perm
 
 
+# ---------------------------------------------------------------------------
+# ELL / hybrid local-expansion containers (built at partition time)
+# ---------------------------------------------------------------------------
+
+
+def _round_up(x: int, multiple: int) -> int:
+    return -(-x // multiple) * multiple
+
+
+def ell_from_edges(
+    src: np.ndarray,
+    dst: np.ndarray,
+    n_rows: int,
+    n_cols: int,
+    k: int,
+    width: int | None = None,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Degree-split one local COO edge block at ``k``.
+
+    Rows (destinations) with degree <= ``k`` move *entirely* into a dense
+    destination-major ``(n_rows, width)`` ELL slab (sentinel-padded with
+    ``n_cols``, which never hits a frontier bitmap); heavier rows keep all
+    their edges in the returned COO residue — each row's edge set lives in
+    exactly one structure, so ``min(slab result, residue result)`` equals
+    the flat segment_min over the union.  ``width`` (defaults to ``k``)
+    lets hybrid blocks share one slab width across blocks with different
+    per-block splits.  Edges at the (``n_cols``, ``n_rows``) sentinels are
+    dropped, mirroring how the gathers mask them.
+    """
+    width = k if width is None else width
+    src = np.asarray(src, np.int64)
+    dst = np.asarray(dst, np.int64)
+    valid = (src < n_cols) & (dst < n_rows)
+    s, d = src[valid], dst[valid]
+    deg = np.bincount(d, minlength=n_rows)
+    in_slab = deg[d] <= k
+    nbr = np.full((n_rows, max(width, 1)), n_cols, np.int32)
+    sd, ss = d[in_slab], s[in_slab]
+    order = np.argsort(sd, kind="stable")
+    sd, ss = sd[order], ss[order]
+    starts = np.searchsorted(sd, np.arange(n_rows))
+    rank = np.arange(sd.size) - starts[sd]
+    nbr[sd, rank] = ss
+    return nbr, s[~in_slab].astype(np.int32), d[~in_slab].astype(np.int32)
+
+
+def select_split_k(
+    degrees: np.ndarray, waste_budget: float = 0.5, multiple: int = 8
+) -> int:
+    """Pick the hybrid degree split from a block's degree histogram.
+
+    Chooses the largest ``k`` (a ``multiple``-aligned slab width) whose ELL
+    slab keeps padding waste under the budget, where waste is the fraction
+    of slab slots holding sentinels:
+
+        waste(k) = 1 - (edges of rows with degree <= k) / (n_rows * k)
+
+    Covered edges grow sublinearly in ``k`` on skewed degree distributions
+    (hubs are few), so the largest affordable ``k`` moves the most edges
+    onto the dense slab while the hub residue stays COO.  Falls back to the
+    smallest slab when even that exceeds the budget (near-empty blocks).
+    """
+    deg = np.asarray(degrees)
+    n_rows = int(deg.size)
+    max_deg = int(deg.max(initial=0))
+    if n_rows == 0 or max_deg == 0:
+        return multiple
+    hist = np.bincount(deg)
+    covered = np.cumsum(np.arange(hist.size) * hist)  # edges of rows deg<=k
+    best = multiple
+    for k in range(multiple, max_deg + multiple, multiple):
+        if covered[min(k, hist.size - 1)] >= (1.0 - waste_budget) * n_rows * k:
+            best = k
+    return best
+
+
+def edge_degrees(
+    src: np.ndarray, dst: np.ndarray, n_rows: int, n_cols: int
+) -> np.ndarray:
+    """Per-destination degree over the valid (non-sentinel) edges — THE
+    valid-edge convention every container builder shares."""
+    src, dst = np.asarray(src), np.asarray(dst)
+    valid = (src < n_cols) & (dst < n_rows)
+    return np.bincount(dst[valid], minlength=n_rows)[:n_rows]
+
+
+def ell_graph_arrays(
+    src: np.ndarray, dst: np.ndarray, n: int, deg_multiple: int = 8
+) -> tuple[np.ndarray, int]:
+    """Whole-graph ELL slab for the single-device driver.
+
+    ``k`` covers the heaviest row (rounded to the kernel's degree chunk),
+    so the residue is empty — the pure-ELL backend.  Returns (slab, k).
+    """
+    k = _round_up(max(int(edge_degrees(src, dst, n, n).max(initial=1)), 1),
+                  deg_multiple)
+    nbr, res_s, _ = ell_from_edges(src, dst, n, n, k)
+    assert res_s.size == 0, "pure ELL must cover every row"
+    return nbr, k
+
+
+def hybrid_graph_arrays(
+    src: np.ndarray,
+    dst: np.ndarray,
+    n: int,
+    waste_budget: float = 0.5,
+    split_k: int | None = None,
+    deg_multiple: int = 8,
+    res_multiple: int = 1024,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, int]:
+    """Whole-graph hybrid COO/ELL split for the single-device driver.
+
+    Returns (slab, residue src, residue dst, k); the residue arrays are
+    sentinel-padded ((n, n)) to a static ``res_multiple`` capacity.
+    """
+    deg = edge_degrees(src, dst, n, n)
+    k = split_k or select_split_k(deg, waste_budget, deg_multiple)
+    nbr, res_s, res_d = ell_from_edges(src, dst, n, n, k)
+    cap = _round_up(max(res_s.size, 1), res_multiple)
+    pad = cap - res_s.size
+    res_s = np.concatenate([res_s, np.full(pad, n, np.int32)])
+    res_d = np.concatenate([res_d, np.full(pad, n, np.int32)])
+    return nbr, res_s, res_d, k
+
+
 def block_pad(g: CSRGraph, multiple: int) -> CSRGraph:
     """Pad vertex count to a multiple (replaces the paper's odd-rank residuum
     handling, §7.2.1 — static padding instead of special-case code paths)."""

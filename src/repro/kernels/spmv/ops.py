@@ -1,58 +1,104 @@
-"""Dispatch layer for the ELL SpMV kernel."""
+"""Dispatch layer for the ELL SpMV kernels (push, pull, plane-batched).
+
+The Pallas kernels tile at ``ROW_TILE`` rows x ``DEG_CHUNK`` neighbor slots.
+Off-multiple blocks used to fall silently to the interpret-speed reference
+even on TPU; the dispatchers now *pad* instead — rows are extended with
+all-sentinel (``n_cols``) neighbor lists that produce INF and are sliced
+off, the degree axis with sentinel slots that never hit the frontier — so
+the compiled path is reachable from any block geometry the expansion
+backends produce.
+
+``interpret=None`` keeps the backend rule (compiled kernel on TPU, jnp
+reference elsewhere); passing an explicit bool forces the Pallas path in
+that mode, which is how the padding wrappers are exercised on CPU.
+"""
 
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels.spmv import pull, ref, spmv
 
 
-def spmv_min(nbr: jax.Array, f_words: jax.Array, n_cols: int) -> jax.Array:
+def _use_kernel(interpret: bool | None) -> bool:
+    return interpret is not None or jax.default_backend() == "tpu"
+
+
+def _pad_nbr(nbr: jax.Array, n_cols: int) -> tuple[jax.Array, int]:
+    """Pad an ELL block to the kernel tile: rows to ROW_TILE with sentinel
+    ``n_cols`` neighbor lists, the degree axis to DEG_CHUNK with sentinel
+    slots.  Returns (padded block, true row count to slice back to)."""
     n_rows, max_deg = nbr.shape
-    if (
-        jax.default_backend() == "tpu"
-        and n_rows % spmv.ROW_TILE == 0
-        and max_deg % spmv.DEG_CHUNK == 0
-    ):
-        return spmv.spmv_min_pallas(nbr, f_words, n_cols)
-    return ref.spmv_min(nbr, f_words, n_cols)
+    rpad = -n_rows % spmv.ROW_TILE
+    dpad = -max_deg % spmv.DEG_CHUNK
+    if rpad or dpad:
+        nbr = jnp.pad(nbr, ((0, rpad), (0, dpad)), constant_values=n_cols)
+    return nbr, n_rows
+
+
+def _pad_u_words(u_words: jax.Array, rows_pad: int) -> jax.Array:
+    """Extend an unreached bitmap to cover padded rows (zero bits -> INF
+    rows, which the row slice drops).  Works on (W,) and (B, W) layouts."""
+    need = rows_pad // 32
+    have = u_words.shape[-1]
+    if have == need:
+        return u_words
+    assert have < need, (have, need)
+    pad = [(0, 0)] * (u_words.ndim - 1) + [(0, need - have)]
+    return jnp.pad(u_words, pad)
+
+
+def spmv_min(
+    nbr: jax.Array, f_words: jax.Array, n_cols: int, interpret: bool | None = None
+) -> jax.Array:
+    if not _use_kernel(interpret):
+        return ref.spmv_min(nbr, f_words, n_cols)
+    padded, n_rows = _pad_nbr(nbr, n_cols)
+    return spmv.spmv_min_pallas(padded, f_words, n_cols, interpret=interpret)[:n_rows]
 
 
 def spmv_pull_min(
-    nbr: jax.Array, f_words: jax.Array, u_words: jax.Array, n_cols: int
+    nbr: jax.Array,
+    f_words: jax.Array,
+    u_words: jax.Array,
+    n_cols: int,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """Pull direction: rows whose *unreached* bit is clear are masked to INF."""
-    n_rows, max_deg = nbr.shape
-    if (
-        jax.default_backend() == "tpu"
-        and n_rows % pull.ROW_TILE == 0
-        and max_deg % pull.DEG_CHUNK == 0
-    ):
-        return pull.spmv_pull_min_pallas(nbr, f_words, u_words, n_cols)
-    return ref.spmv_pull_min(nbr, f_words, u_words, n_cols)
+    if not _use_kernel(interpret):
+        return ref.spmv_pull_min(nbr, f_words, u_words, n_cols)
+    padded, n_rows = _pad_nbr(nbr, n_cols)
+    u_words = _pad_u_words(u_words, padded.shape[0])
+    return pull.spmv_pull_min_pallas(
+        padded, f_words, u_words, n_cols, interpret=interpret
+    )[:n_rows]
 
 
-def spmv_min_planes(nbr: jax.Array, f_words: jax.Array, n_cols: int) -> jax.Array:
+def spmv_min_planes(
+    nbr: jax.Array, f_words: jax.Array, n_cols: int, interpret: bool | None = None
+) -> jax.Array:
     """Multi-source push: (B, n_cols/32) frontier planes -> (B, n_rows)."""
-    n_rows, max_deg = nbr.shape
-    if (
-        jax.default_backend() == "tpu"
-        and n_rows % spmv.ROW_TILE == 0
-        and max_deg % spmv.DEG_CHUNK == 0
-    ):
-        return spmv.spmv_min_planes_pallas(nbr, f_words, n_cols)
-    return ref.spmv_min_planes(nbr, f_words, n_cols)
+    if not _use_kernel(interpret):
+        return ref.spmv_min_planes(nbr, f_words, n_cols)
+    padded, n_rows = _pad_nbr(nbr, n_cols)
+    return spmv.spmv_min_planes_pallas(padded, f_words, n_cols, interpret=interpret)[
+        :, :n_rows
+    ]
 
 
 def spmv_pull_min_planes(
-    nbr: jax.Array, f_words: jax.Array, u_words: jax.Array, n_cols: int
+    nbr: jax.Array,
+    f_words: jax.Array,
+    u_words: jax.Array,
+    n_cols: int,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """Multi-source pull: per-plane frontier AND unreached bitmaps."""
-    n_rows, max_deg = nbr.shape
-    if (
-        jax.default_backend() == "tpu"
-        and n_rows % pull.ROW_TILE == 0
-        and max_deg % pull.DEG_CHUNK == 0
-    ):
-        return pull.spmv_pull_min_planes_pallas(nbr, f_words, u_words, n_cols)
-    return ref.spmv_pull_min_planes(nbr, f_words, u_words, n_cols)
+    if not _use_kernel(interpret):
+        return ref.spmv_pull_min_planes(nbr, f_words, u_words, n_cols)
+    padded, n_rows = _pad_nbr(nbr, n_cols)
+    u_words = _pad_u_words(u_words, padded.shape[0])
+    return pull.spmv_pull_min_planes_pallas(
+        padded, f_words, u_words, n_cols, interpret=interpret
+    )[:, :n_rows]

@@ -53,3 +53,7 @@ def integers(min_value: int, max_value: int) -> _Integers:
 
 def floats(min_value: float, max_value: float, **_kw) -> _Floats:
     return _Floats(min_value, max_value)
+
+
+def booleans() -> _SampledFrom:
+    return _SampledFrom((False, True))

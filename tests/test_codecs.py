@@ -5,10 +5,10 @@ import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from repro.compression import codecs, registry, threshold
+from repro.comm import codecs, registry, threshold
 from repro.graphgen import zipf
 
-ALL_CODECS = registry.available()
+ALL_CODECS = registry.available_codecs()
 
 
 @pytest.mark.parametrize("name", ALL_CODECS)
@@ -104,3 +104,25 @@ def test_threshold_policy():
     # bitpack kernel lives on-device (DESIGN.md §3)
     cpu_on_ici = threshold.ThresholdPolicy(codec_speed_mips=3200, codec_dspeed_mips=4700)
     assert cpu_on_ici.modeled_speedup(1 << 20, ratio=8.0) < 1.5
+
+
+def test_compression_shim_deprecated():
+    """Satellite: the retired ``repro.compression`` package is one
+    deprecation-warning module whose old submodule paths resolve to their
+    ``repro.comm`` homes."""
+    import sys
+
+    for m in [m for m in sys.modules if m.startswith("repro.compression")]:
+        sys.modules.pop(m)
+    with pytest.warns(DeprecationWarning, match="repro.comm"):
+        import repro.compression  # noqa: F401
+    from repro.compression import codecs as shim_codecs
+    from repro.compression import registry as shim_registry
+    from repro.compression import threshold as shim_threshold
+
+    assert shim_codecs is codecs
+    assert shim_threshold is threshold
+    assert shim_registry.make_codec is registry.make_codec
+    # the retired registry shim's own aliases stay alive on the proxy
+    assert shim_registry.available is registry.available_codecs
+    assert shim_registry.register is registry.register_codec

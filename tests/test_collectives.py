@@ -8,7 +8,7 @@ from hypothesis import given, settings
 from hypothesis import strategies as st
 
 from repro import comm
-from repro.compression import collectives as cc
+from repro import comm as cc
 
 
 @settings(max_examples=25, deadline=None)

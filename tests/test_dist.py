@@ -179,7 +179,7 @@ def test_sparse_packed_branches_execute_4dev():
         """
 import numpy as np, jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from repro.compression import collectives as cc
+from repro import comm as cc
 mesh = jax.make_mesh((4,), ("data",))
 s = 65536
 ladder = cc.BucketLadder.default(s)
@@ -213,7 +213,7 @@ def test_bfs_scale18_all_buckets_4dev():
         """
 import numpy as np, jax, jax.numpy as jnp
 from repro.core import csr as csrmod, distributed_bfs as dbfs, validate
-from repro.compression import collectives as cc
+from repro import comm as cc
 from repro.graphgen import builder, kronecker
 g = builder.build_csr(kronecker.kronecker_edges(18, seed=3), n=1<<18)
 mesh = jax.make_mesh((2, 2), ("data", "model"))
@@ -241,7 +241,7 @@ def test_compressed_allgather_membership_4dev():
         """
 import numpy as np, jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from repro.compression import collectives as cc
+from repro import comm as cc
 mesh = jax.make_mesh((4,), ("data",))
 s = 2048
 ladder = cc.BucketLadder.default(s)
