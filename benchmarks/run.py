@@ -23,6 +23,7 @@ def write_bench_comm(
     policy_levels: dict | None = None,
     batch: dict | None = None,
     compute: dict | None = None,
+    teps: dict | None = None,
 ) -> None:
     from benchmarks import bfs_comm, breakdown
 
@@ -83,6 +84,9 @@ def write_bench_comm(
         # local-expansion compute breakdown: per-level push/pull wall time
         # per backend on the hub graph (the axis the byte tables can't see)
         "compute": compute,
+        # Graph500 Kernel-2 throughput: harmonic-mean TEPS over the spec's
+        # valid-root sample (benchmarks.teps), the trajectory's speed row
+        "teps": teps or {},
     }
     with open(path, "w") as f:
         json.dump(doc, f, indent=2)
@@ -109,6 +113,10 @@ def main() -> None:
 
     bench_table: list[tuple] = []  # shared with write_bench_comm below
     compute_box: list[dict] = []  # expansion breakdown, shared the same way
+    teps_box: list[dict] = []  # harmonic-TEPS row, shared the same way
+
+    def teps_suite() -> None:
+        teps_box.append(teps.main())
 
     def breakdown_suite() -> None:
         breakdown.main_zones()
@@ -137,7 +145,7 @@ def main() -> None:
         ("frontier_stats (Fig 5.2 / Table 5.3)", frontier_stats.main),
         ("bfs_comm (Tables 7.4/7.5)", bfs_comm_suite),
         ("breakdown (Fig 7.3 + expansion backends)", breakdown_suite),
-        ("teps (§2.6.3)", teps.main),
+        ("teps (§2.6.3)", teps_suite),
     ]
     if args.full and "scaling" not in args.skip:
         from benchmarks import scaling
@@ -166,6 +174,7 @@ def main() -> None:
                 args.bench_json, args.full, table=table,
                 policy_levels=policy_levels, batch=batch,
                 compute=compute_box[0] if compute_box else None,
+                teps=teps_box[0] if teps_box else None,
             )
         except Exception:  # noqa: BLE001
             failures.append("bench-json")

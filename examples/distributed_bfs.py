@@ -12,8 +12,9 @@ and ELL padding ratio — results are bit-identical across backends.
 
 ``--batch B`` traverses B sources at once: the frontier/parent carries
 widen to (B, s) planes and every exchange moves all B planes under one
-wire header and one bucket consensus.  The batched parents then feed a
-small betweenness-centrality accumulation (Brandes-style dependency pass
+wire header and one bucket consensus.  The batched parents then feed the
+betweenness-centrality accumulation from
+``repro.core.centrality.tree_betweenness`` (Brandes-style dependency pass
 over each source's BFS tree) — the workload family multi-source batching
 opens up.
 """
@@ -49,33 +50,8 @@ from repro.core import csr as csrmod  # noqa: E402
 from repro.core import distributed_bfs as dbfs  # noqa: E402
 from repro.core import expand as expand_mod  # noqa: E402
 from repro.core import validate  # noqa: E402
+from repro.core.centrality import tree_betweenness  # noqa: E402
 from repro.graphgen import builder, kronecker  # noqa: E402
-
-
-def tree_betweenness(parents: np.ndarray, levels: np.ndarray, n: int) -> np.ndarray:
-    """Brandes-style dependency accumulation over each source's BFS tree.
-
-    ``parents``/``levels``: (B, n) batched BFS output.  For each source
-    plane, every vertex's dependency is the number of tree descendants
-    below it (each shortest path in the tree contributes once); summing the
-    per-source dependencies over the batch approximates betweenness
-    centrality the way sampled-source Brandes does — the accumulation is a
-    single bottom-up sweep by level over the batched parent planes.
-    """
-    bc = np.zeros(n)
-    for parent, level in zip(parents, levels):
-        delta = np.zeros(n)
-        order = np.argsort(level)[::-1]  # deepest levels first
-        for v in order:
-            if level[v] <= 0:  # unreached or the root itself
-                continue
-            p = parent[v]
-            delta[p] += 1.0 + delta[v]
-        root_mask = level == 0
-        contrib = delta.copy()
-        contrib[root_mask] = 0.0  # endpoints do not count
-        bc += contrib
-    return bc
 
 
 def main() -> None:

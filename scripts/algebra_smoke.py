@@ -1,0 +1,103 @@
+"""Frontier-algebra smoke gate: SSSP + CC on a scale-15 Kronecker graph,
+2x2 grid, 4 forced host devices — fails on byte-model drift.
+
+Usage: PYTHONPATH=src python scripts/algebra_smoke.py [--scale 15]
+
+Three gates per (algebra x wire plan):
+
+  1. CommStats <-> HLO reconciliation: the trace-time ledger must match
+     the lowered program's collective bytes 1:1 per op kind (the tentpole
+     acceptance — a recorded-but-dead or unrecorded collective fails here);
+  2. static value-payload pricing: every ``values`` / ``dense-i32`` ledger
+     record must equal ``check_bench_comm.value_unit_bytes`` exactly
+     (density-independent formats leave no tolerance);
+  3. reference correctness: the executed distances equal host Dijkstra
+     over the same hashed weights, the labels equal union-find min-ids.
+
+Exit status 1 on any drift, so CI can gate on it.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np  # noqa: E402
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.comm import CommStats  # noqa: E402
+from repro.core import csr as csrmod  # noqa: E402
+from repro.core import distributed_bfs as dbfs  # noqa: E402
+from repro.core import validate  # noqa: E402
+from repro.graphgen import builder, kronecker  # noqa: E402
+from repro.launch import roofline  # noqa: E402
+
+import check_bench_comm as cbc  # noqa: E402  (sibling script)
+
+ROWS = COLS = 2
+MODES = ("auto", "btfly")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=15)
+    args = ap.parse_args()
+
+    t0 = time.perf_counter()
+    g = builder.build_csr(
+        kronecker.kronecker_edges(args.scale, seed=5), n=1 << args.scale
+    )
+    mesh = jax.make_mesh((ROWS, COLS), ("data", "model"))
+    bg = csrmod.partition_2d(g, rows=ROWS, cols=COLS)
+    part = bg.part
+    root = int(np.argmax(g.degrees()))
+    print(f"# scale={args.scale} n={g.n:,} m={g.m:,} s={part.chunk:,} "
+          f"root={root} ({time.perf_counter() - t0:.1f}s setup)")
+
+    print("# host oracles: Dijkstra + union-find ...", flush=True)
+    host_sssp = validate.reference_sssp(g, root)
+    host_cc = validate.reference_cc(g)
+
+    roots = jnp.asarray(np.array([root], np.int32))
+    for alg in ("sssp", "cc"):
+        for mode in MODES:
+            stats = CommStats()
+            cfg = dbfs.DistBFSConfig(
+                mode=mode, policy="direction_opt", algebra=alg, max_levels=256
+            )
+            fn = dbfs.build_bfs(mesh, part, cfg, stats=stats)
+            blocks = dbfs.shard_blocked(mesh, bg, cfg)
+            t0 = time.perf_counter()
+            compiled = jax.jit(fn).lower(
+                *blocks, jax.ShapeDtypeStruct((1,), jnp.int32)
+            ).compile()
+            cmp = roofline.compare_comm_stats(stats, compiled.as_text())
+            if not cmp.match:
+                raise SystemExit(
+                    f"{alg}/{mode}: CommStats/HLO drift {cmp.diff()}"
+                )
+            n_val = cbc.check_value_records(
+                stats.records(), s=part.chunk, r=ROWS, c=COLS
+            )
+            val, lev, dep = fn(*blocks, roots)
+            got = np.asarray(val)[0][: g.n].astype(np.int64)
+            host = host_sssp if alg == "sssp" else host_cc
+            bad = int((got != host).sum())
+            if bad:
+                raise SystemExit(
+                    f"{alg}/{mode}: {bad} vertices disagree with the host "
+                    f"oracle (first: v={int(np.nonzero(got != host)[0][0])})"
+                )
+            print(f"{alg:5s}/{mode:5s}: HLO parity OK, {n_val} value-payload "
+                  f"records priced, oracle exact, depth={int(dep)} "
+                  f"({time.perf_counter() - t0:.1f}s)")
+    print("ALGEBRA SMOKE OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -37,6 +37,42 @@ PAD_BYTES = 4 * 1024
 STRICT_BATCH_POLICIES = ("top_down", "direction_opt")
 
 
+def value_unit_bytes(fmt: str, collective: str, s: int, r: int, c: int) -> int:
+    """Static per-plane wire bytes of a value-payload record (the frontier-
+    algebra axis: SSSP distances, CC labels, PageRank mass).
+
+    ``values``: the per-level value gather — the transpose ppermute moves
+    one owned chunk (s int32 words); the column all-gather replicates it
+    across the r grid rows (r*s words, per-device result-shape
+    convention).  ``dense-i32``: the dense int32 row combine ships one
+    chunk per row peer (all-to-all over c columns) or one chunk per
+    butterfly stage (ppermute).  Both are density-independent, so the
+    model is exact — any disagreement with a replayed ledger is drift.
+    """
+    if fmt == "values":
+        return 4 * (r * s if collective == "all-gather" else s)
+    if fmt == "dense-i32":
+        return 4 * (c * s if collective == "all-to-all" else s)
+    raise KeyError(f"not a value-payload format: {fmt}")
+
+
+def check_value_records(records, s: int, r: int, c: int) -> int:
+    """Price every value-payload record of a CommStats ledger against the
+    static model.  Exits non-zero on any drift; returns entries checked."""
+    n_checked = 0
+    for rec in records:
+        if rec.fmt not in ("values", "dense-i32"):
+            continue
+        model = value_unit_bytes(rec.fmt, rec.collective, s, r, c) * rec.count
+        if rec.nbytes != model:
+            raise SystemExit(
+                f"{rec.phase}: {rec.fmt} {rec.collective} ledger {rec.nbytes} B "
+                f"vs static model {model} B (s={s}, r={r}, c={c})"
+            )
+        n_checked += 1
+    return n_checked
+
+
 def _check_stage(e: dict, s: int, n: int, ctx: str = "") -> None:
     zone = e.get("zone", "row")
     if zone == "row-pull":

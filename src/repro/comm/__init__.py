@@ -24,7 +24,7 @@ threshold).  This subsystem owns that choice end to end:
 Layering: core/distributed_bfs -> comm -> kernels (bitpack/quant).
 The host-side variable-length codecs (:mod:`repro.comm.codecs`) and the
 §5.4.3 break-even model (:mod:`repro.comm.threshold`) live here too; the
-old ``repro.compression`` package is a single deprecation-warning shim.
+old ``repro.compression`` package is fully retired.
 """
 
 from repro.comm.engine import AdaptiveExchange  # noqa: F401

@@ -113,7 +113,7 @@ class ButterflySchedule:
 
 
 def row_wire(
-    s: int, n: int, policy=None
+    s: int, n: int, policy=None, payload_width: int | None = None
 ) -> tuple[BucketLadder, BitmapParentFormat | DenseFormat]:
     """Ladder + dense floor of the butterfly row stages (shared with the
     host-replay benchmark so device and bench model the same wire).
@@ -124,9 +124,11 @@ def row_wire(
     exchanges do.  When that class stays below 32 bits the dense floor is
     the found-bitmap + packed-parent format (s/32 + s*w/32 words — the
     "bitmap OR-merge" of dense stages); at 32 bits it degenerates to the
-    dense int32 vector.
+    dense int32 vector.  ``payload_width`` overrides the id class for
+    frontier algebras whose candidate payload is a value, not an id
+    (already global either way — the width just prices/packs it).
     """
-    w = width_class(n)
+    w = width_class(n) if payload_width is None else payload_width
     floor: BitmapParentFormat | DenseFormat
     if w < 32:
         floor = BitmapParentFormat(s, w)
@@ -192,6 +194,7 @@ def build_row_exchange(
     policy=None,
     stats=None,
     phase: str = "bfs/row",
+    alg=None,
 ):
     """Build ``fn(prop (b, c, s) int32) -> (b, s) int32`` — the staged
     analog of the direct row ALLTOALLV + min, over ``b`` source planes.
@@ -201,21 +204,39 @@ def build_row_exchange(
     Every stage moves all ``b`` planes of its subchunks in one ppermute pair
     and union-merges them per plane — the multi-source planes stack for
     free on the staged exchange's per-hop merge.
+
+    ``alg`` generalizes the per-hop merge to a frontier algebra's combine
+    (``None`` keeps the BFS min-parent semantics).  Min-algebras ride the
+    same staged compressed wire (their payload width/globalization come
+    from the algebra); the sum-algebra exchanges dense int32 value blocks
+    per stage (a sum of partial sums is dense by construction — there is
+    no sparse stream to re-bucket) and add-merges on the decoded values.
     """
     c = group_size
     n = n_c * c
     sched = ButterflySchedule(c)
-    ladder, floor = row_wire(s, n, policy=policy)
+    is_sum = alg is not None and alg.reduce == "sum"
+    payload_is_id = alg is None or alg.payload_is_id
+    ladder, floor = row_wire(
+        s, n, policy=policy,
+        payload_width=None if payload_is_id else alg.row_payload_width(n_c, n),
+    )
+    empty = jnp.int32(0 if is_sum else INF)
+    combine = jnp.minimum if alg is None else alg.combine
+    dense = DenseFormat(s)
     p, extra, slots = sched.p, sched.extra, sched.slots
 
     def exchange(block, perm, gate, zone):
+        if is_sum:
+            ex = AdaptiveExchange(zone, axis, c, None, stats, planes=b)
+            return ex.ppermute(block, perm, fmt=dense.name)
         ex = AdaptiveExchange(zone, axis, c, ladder, stats, planes=b)
         return cc.ppermute_min_block(ex, block, perm, ladder, floor, gate=gate)
 
     def run(prop: jax.Array) -> jax.Array:
         assert prop.shape == (b, c, s), (prop.shape, b, c, s)
         j = jax.lax.axis_index(axis)
-        if to_global:
+        if to_global and payload_is_id:
             prop = jnp.where(prop < INF, j * n_c + prop, INF)
         if c == 1:
             return prop[:, 0]
@@ -225,7 +246,7 @@ def build_row_exchange(
         main = prop_t[:p]
         if extra:
             over = jnp.concatenate(
-                [prop_t[p:], jnp.full((p - extra, b, s), INF, jnp.int32)],
+                [prop_t[p:], jnp.full((p - extra, b, s), empty, jnp.int32)],
                 axis=0,
             )
             state = jnp.stack([main, over], axis=1)  # (p, 2, b, s)
@@ -237,7 +258,7 @@ def build_row_exchange(
                 gate=j >= p,
                 zone=f"{phase}[btfly:fold]",
             ).reshape(p, slots, b, s)
-            state = jnp.minimum(state, jnp.where(j < extra, recv, INF))
+            state = combine(state, jnp.where(j < extra, recv, empty))
         else:
             state = main[:, None]  # (p, 1, b, s)
 
@@ -254,7 +275,10 @@ def build_row_exchange(
                 gate=j < p,
                 zone=f"{phase}[btfly:{t}]",
             ).reshape(nblk, slots, b, s)
-            state = state.at[idx_keep].min(recv)
+            if is_sum:
+                state = state.at[idx_keep].set(combine(state[idx_keep], recv))
+            else:
+                state = state.at[idx_keep].min(recv)
 
         row = jnp.take(state, jv, axis=0)  # (slots, b, s) — my merged leaf
         own = row[0]  # (b, s)

@@ -201,6 +201,27 @@ def allgather_membership_planes(
 
 
 # ---------------------------------------------------------------------------
+# column phase: value-plane all-gather (non-BFS frontier algebras)
+# ---------------------------------------------------------------------------
+
+
+def gather_values_planes(ex: AdaptiveExchange, x: jax.Array) -> jax.Array:
+    """Dense int32 all-gather of ``(B, s)`` encoded value planes ->
+    ``(B, group_size * s)``.
+
+    The value companion of the membership gather: algebras whose message is
+    not the source id itself (sssp distances, cc labels, pagerank mass)
+    assemble the column slice of *source values* next to the membership
+    bits.  Values travel as raw int32 words (width-32 packing is the
+    identity), priced like a :class:`repro.comm.formats.DenseFormat` of
+    ``s`` words per rank per plane.
+    """
+    b, s = x.shape
+    g = ex.all_gather(x, fmt="values").reshape(ex.group_size, b, s)
+    return jnp.moveaxis(g, 0, 1).reshape(b, -1)
+
+
+# ---------------------------------------------------------------------------
 # row phase: candidate all-to-all + min-reduce
 # ---------------------------------------------------------------------------
 
@@ -303,6 +324,26 @@ def alltoall_dense_min_planes(ex: AdaptiveExchange, prop: jax.Array) -> jax.Arra
     return jnp.min(recv, axis=0)
 
 
+def alltoall_dense_combine_planes(
+    ex: AdaptiveExchange, prop: jax.Array, alg
+) -> jax.Array:
+    """Dense int32 all-to-all + algebra combine of ``(B, c, s)`` planes.
+
+    The semiring-general row exchange: min-algebras reduce exactly like
+    :func:`alltoall_dense_min_planes`; sum-algebras (pagerank) decode the
+    received partial sums, add across senders and re-encode — the absent
+    sentinel 0 decodes to the additive identity, so no masking is needed.
+    """
+    b, c, s = prop.shape
+    fmt = DenseFormat(s)
+    recv = ex.all_to_all(
+        jnp.moveaxis(prop, 0, 1), fmt=fmt.name
+    ).reshape(c, b, s)
+    if alg.reduce == "min":
+        return jnp.min(recv, axis=0)
+    return alg.enc(jnp.sum(alg.dec(recv), axis=0))
+
+
 def alltoall_min_candidates_planes(
     prop: jax.Array,
     axis,
@@ -393,10 +434,13 @@ def alltoall_min_candidates_planes(
 
 
 def alltoall_bitmap_min_planes(
-    ex: AdaptiveExchange, prop: jax.Array, fmt: BitmapParentFormat, n_c: int
+    ex: AdaptiveExchange, prop: jax.Array, fmt: BitmapParentFormat,
+    n_c: int | None,
 ) -> jax.Array:
     """Batched bottom-up row exchange: B found-bitmap + packed-parent planes
-    per destination chunk, one all-to-all for all of them."""
+    per destination chunk, one all-to-all for all of them.  ``n_c=None``
+    means the payload is already global (non-id algebras) — no per-sender
+    re-globalization."""
     b, c, s = prop.shape
     assert s == fmt.s, (prop.shape, fmt.s)
     prop_t = jnp.moveaxis(prop, 0, 1)  # (c, B, s)
@@ -404,12 +448,14 @@ def alltoall_bitmap_min_planes(
     recv = ex.all_to_all(words, fmt=fmt.name).reshape(c, b, fmt.data_words)
     bits, local = jax.vmap(jax.vmap(fmt.unpack))(recv)  # (c, B, s) each
     sender = jnp.arange(c, dtype=jnp.int32)[:, None, None]
-    glob = jnp.where(bits, sender * n_c + local, INF)
+    glob = local if n_c is None else sender * n_c + local
+    glob = jnp.where(bits, glob, INF)
     return jnp.min(glob, axis=0).astype(jnp.int32)
 
 
 def alltoall_bitmap_min(
-    ex: AdaptiveExchange, prop: jax.Array, fmt: BitmapParentFormat, n_c: int
+    ex: AdaptiveExchange, prop: jax.Array, fmt: BitmapParentFormat,
+    n_c: int | None,
 ) -> jax.Array:
     """Bottom-up row exchange: found-bitmap + bit-packed local parents.
 
@@ -418,7 +464,9 @@ def alltoall_bitmap_min(
     sender's subchunk travels as ``s/32`` found bits plus ``payload_width``
     bits per position; the receiver rebuilds global parent ids from the
     sender's grid-column index and min-reduces, reproducing exactly the
-    winner the push direction's ``segment_min`` would pick.
+    winner the push direction's ``segment_min`` would pick.  ``n_c=None``
+    disables the re-globalization for payloads that are already global
+    values (non-id min-algebras, e.g. cc labels).
     """
     c, s = prop.shape
     assert s == fmt.s, (s, fmt.s)
@@ -426,7 +474,8 @@ def alltoall_bitmap_min(
     recv = ex.all_to_all(words, fmt=fmt.name).reshape(c, fmt.data_words)
     bits, local = jax.vmap(fmt.unpack)(recv)  # (c, s) each
     sender = jnp.arange(c, dtype=jnp.int32)[:, None]  # grid-column of origin
-    glob = jnp.where(bits, sender * n_c + local, INF)
+    glob = local if n_c is None else sender * n_c + local
+    glob = jnp.where(bits, glob, INF)
     return jnp.min(glob, axis=0).astype(jnp.int32)
 
 

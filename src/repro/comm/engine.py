@@ -100,6 +100,13 @@ class AdaptiveExchange:
                   moved=2 * self._peer_share(out), per_plane=False)
         return out
 
+    def pmin(self, x: jax.Array, *, fmt: str = CONSENSUS, part: str = "bucket") -> jax.Array:
+        out = jax.lax.pmin(x, self.axis)
+        # consensus-shaped like pmax (the SSSP window floor rides this)
+        self._rec(fmt, "all-reduce", part, out,
+                  moved=2 * self._peer_share(out), per_plane=False)
+        return out
+
     def psum(self, x: jax.Array, *, fmt: str, part: str = "value") -> jax.Array:
         out = jax.lax.psum(x, self.axis)
         self._rec(fmt, "all-reduce", part, out, moved=2 * self._peer_share(out))

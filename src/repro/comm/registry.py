@@ -12,10 +12,13 @@ hand-rolled fourth collective.
 registry axis: ``top_down`` / ``bottom_up`` / ``direction_opt``, defined in
 :mod:`repro.core.traversal` and resolved here by name; **expansion
 backends** (local block storage: ``coo`` / ``ell`` / ``hybrid``, defined in
-:mod:`repro.core.expand`) are the fourth.  A distributed BFS configuration
-is a *policy x wire-plan x expansion* point, and new exchange patterns
-(butterfly) or block layouts (hybrid COO/ELL) slot in as combinations
-rather than bespoke drivers.
+:mod:`repro.core.expand`) are the fourth; **frontier algebras** (the
+semiring axis: ``bfs`` / ``sssp`` / ``cc`` / ``pagerank``, defined in
+:mod:`repro.core.algebra`) are the fifth.  A distributed traversal
+configuration is an *algebra x policy x wire-plan x expansion* point, and
+new exchange patterns (butterfly), block layouts (hybrid COO/ELL) or
+vertex programs (a new semiring) slot in as combinations rather than
+bespoke drivers.
 
 Host codecs (variable-length, numpy — benchmarks and the host Graph500
 driver) and wire plans (static-shape, in-graph) live in the same module so
@@ -87,9 +90,15 @@ class WirePlan:
     plane-batched: ``build_column(s, axis, group_size, *, b, policy, stats,
     phase)`` returns ``fn(bits (b, s) bool) -> (b, group_size*s) bool``;
     ``build_row(s, axis, group_size, n_c, parent_width, *, b, ...)``
-    returns ``fn(prop (b, group_size, s) i32) -> (b, s) i32`` (min over
-    senders per plane; ``n_c`` is the column-slice width, which sizes the
-    packed parent payload).  At ``b == 1`` the wire is byte-identical to
+    returns ``fn(prop (b, group_size, s) i32) -> (b, s) i32`` (combined
+    over senders per plane; ``n_c`` is the column-slice width, which sizes
+    the packed parent payload).  Row builders additionally take an ``alg``
+    keyword — the :class:`repro.core.algebra.FrontierAlgebra` whose
+    payload/combine the wire carries: id payloads localize/re-globalize
+    against ``n_c``, value payloads travel as-is at the algebra's payload
+    width, and sum-reduce algebras collapse every plan to the dense int32
+    exchange with the algebra's add-combine (``alg=None`` keeps the
+    historical min-parent wire bit-for-bit).  At ``b == 1`` the wire is byte-identical to
     the single-source exchange; at ``b > 1`` all planes share one bucket
     consensus and one collective pair per exchange, with id-stream
     sidebands packed one word per plane (the shared-header amortization).
@@ -160,11 +169,26 @@ def _auto_column(s, axis, group_size, *, b=1, policy=None, stats=None,
     )
 
 
+def _sum_algebra(alg) -> bool:
+    """Sum-reduce algebras bypass the min-merge sparse machinery: their
+    candidates are dense partial sums, so every row wire degenerates to the
+    dense int32 exchange with the algebra's add-combine."""
+    return alg is not None and alg.reduce == "sum"
+
+
+def _localize_n_c(alg, n_c):
+    """Column-slice width for payload localization, or None when the
+    payload is a value (already global) rather than a source id."""
+    return n_c if alg is None or alg.payload_is_id else None
+
+
 def _dense_row(
     s, axis, group_size, n_c, parent_width, *, b=1, policy=None, stats=None,
-    phase="bfs/row",
+    phase="bfs/row", alg=None,
 ):
     ex = AdaptiveExchange(phase, axis, group_size, None, stats, planes=b)
+    if _sum_algebra(alg):
+        return lambda prop: cc.alltoall_dense_combine_planes(ex, prop, alg)
     if b == 1:
         return lambda prop: cc.alltoall_dense_min(ex, prop[0])[None]
     return lambda prop: cc.alltoall_dense_min_planes(ex, prop)
@@ -172,44 +196,52 @@ def _dense_row(
 
 def _auto_row(
     s, axis, group_size, n_c, parent_width, *, b=1, policy=None, stats=None,
-    phase="bfs/row",
+    phase="bfs/row", alg=None,
 ):
+    if _sum_algebra(alg):
+        return _dense_row(
+            s, axis, group_size, n_c, parent_width, b=b,
+            policy=policy, stats=stats, phase=phase, alg=alg,
+        )
     # the row phase's dense fallback is a 32-bit candidate vector -> its own
     # (deeper) ladder, with the parent payload priced into every bucket; the
     # payload packs COLUMN-LOCAL offsets (the receiver re-globalizes from the
-    # all-to-all row index), so parent_width = class(n_c) is lossless
+    # all-to-all row index), so parent_width = class(n_c) is lossless.  For
+    # value algebras the payload is already global (``n_c=None`` disables the
+    # localize/re-globalize pair) and parent_width is the value class.
     ladder = BucketLadder.default(
         s, floor_words=s, payload_width=parent_width, policy=policy
     )
+    loc = _localize_n_c(alg, n_c)
     if b == 1:
         return lambda prop: cc.alltoall_min_candidates(
-            prop[0], axis, ladder, group_size, stats=stats, phase=phase, n_c=n_c
+            prop[0], axis, ladder, group_size, stats=stats, phase=phase, n_c=loc
         )[None]
     return lambda prop: cc.alltoall_min_candidates_planes(
-        prop, axis, ladder, group_size, stats=stats, phase=phase, n_c=n_c
+        prop, axis, ladder, group_size, stats=stats, phase=phase, n_c=loc
     )
 
 
 def _btfly_row(
     s, axis, group_size, n_c, parent_width, *, b=1, policy=None, stats=None,
-    phase="bfs/row",
+    phase="bfs/row", alg=None,
 ):
     """log2(C)-stage butterfly push row phase (merge + re-bucket per hop)."""
     return butterfly.build_row_exchange(
         s, axis, group_size, n_c, b=b, to_global=False,
-        policy=policy, stats=stats, phase=phase,
+        policy=policy, stats=stats, phase=phase, alg=alg,
     )
 
 
 def _btfly_row_bu(
     s, axis, group_size, n_c, parent_width, *, b=1, policy=None, stats=None,
-    phase="bfs/row-pull",
+    phase="bfs/row-pull", alg=None,
 ):
     """Butterfly pull row phase: globalize column-local candidates, then the
     same staged min-merge as the push direction."""
     return butterfly.build_row_exchange(
         s, axis, group_size, n_c, b=b, to_global=True,
-        policy=policy, stats=stats, phase=phase,
+        policy=policy, stats=stats, phase=phase, alg=alg,
     )
 
 
@@ -223,14 +255,19 @@ def _btfly_unreached(
 
 def _dense_row_bu(
     s, axis, group_size, n_c, parent_width, *, b=1, policy=None, stats=None,
-    phase="bfs/row-pull",
+    phase="bfs/row-pull", alg=None,
 ):
     """Baseline pull row exchange: globalize candidates, dense int32 wire."""
     ex = AdaptiveExchange(phase, axis, group_size, None, stats, planes=b)
+    if _sum_algebra(alg):
+        return lambda prop: cc.alltoall_dense_combine_planes(ex, prop, alg)
+    localize = alg is None or alg.payload_is_id
 
     def run(prop):
-        j = jax.lax.axis_index(axis)
-        glob = jnp.where(prop < INF, j * n_c + prop, INF)
+        glob = prop
+        if localize:
+            j = jax.lax.axis_index(axis)
+            glob = jnp.where(prop < INF, j * n_c + prop, INF)
         if b == 1:
             return cc.alltoall_dense_min(ex, glob[0])[None]
         return cc.alltoall_dense_min_planes(ex, glob)
@@ -240,19 +277,22 @@ def _dense_row_bu(
 
 def _bitmap_row_bu(
     s, axis, group_size, n_c, parent_width, *, b=1, policy=None, stats=None,
-    phase="bfs/row-pull",
+    phase="bfs/row-pull", alg=None,
 ):
     """Compressed pull row exchange: found-bitmap + bit-packed parents."""
-    if parent_width >= 32:  # payload would not undercut the dense vector
+    if _sum_algebra(alg) or parent_width >= 32:
+        # width-32 payloads (value algebras, huge n_c) would not undercut
+        # the dense vector; sum candidates are dense by nature
         return _dense_row_bu(
             s, axis, group_size, n_c, parent_width, b=b,
-            policy=policy, stats=stats, phase=phase,
+            policy=policy, stats=stats, phase=phase, alg=alg,
         )
     fmt = BitmapParentFormat(s, parent_width)
     ex = AdaptiveExchange(phase, axis, group_size, None, stats, planes=b)
+    loc = _localize_n_c(alg, n_c)
     if b == 1:
-        return lambda prop: cc.alltoall_bitmap_min(ex, prop[0], fmt, n_c)[None]
-    return lambda prop: cc.alltoall_bitmap_min_planes(ex, prop, fmt, n_c)
+        return lambda prop: cc.alltoall_bitmap_min(ex, prop[0], fmt, loc)[None]
+    return lambda prop: cc.alltoall_bitmap_min_planes(ex, prop, fmt, loc)
 
 
 def _raw_unreached(s, axis, group_size, *, b=1, policy=None, stats=None,
@@ -321,6 +361,42 @@ def traversal(name: str) -> Any:
 def available_traversals() -> list[str]:
     _ensure_builtin_traversals()
     return sorted(_TRAVERSALS)
+
+
+# ---------------------------------------------------------------------------
+# frontier algebras (the semiring axis: bfs / sssp / cc / pagerank)
+# ---------------------------------------------------------------------------
+
+_ALGEBRAS: dict[str, Any] = {}
+
+
+def register_algebra(alg: Any) -> None:
+    """Register a frontier algebra object (must expose ``.name``)."""
+    if alg.name in _ALGEBRAS:
+        raise ValueError(f"frontier algebra {alg.name!r} already registered")
+    _ALGEBRAS[alg.name] = alg
+
+
+def _ensure_builtin_algebras() -> None:
+    if not _ALGEBRAS:
+        # registers bfs / sssp / cc / pagerank on import
+        import repro.core.algebra  # noqa: F401
+
+
+def algebra(name: str) -> Any:
+    """Resolve a frontier algebra by name (lazy-imports the built-ins)."""
+    _ensure_builtin_algebras()
+    try:
+        return _ALGEBRAS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown frontier algebra {name!r}; known: {sorted(_ALGEBRAS)}"
+        ) from None
+
+
+def available_algebras() -> list[str]:
+    _ensure_builtin_algebras()
+    return sorted(_ALGEBRAS)
 
 
 # ---------------------------------------------------------------------------

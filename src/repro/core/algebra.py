@@ -1,0 +1,370 @@
+"""Frontier algebras: the (message, combine, update) triple as a registry axis.
+
+"Compression and Sieve" (arXiv:1208.5542) frames the distributed frontier
+exchange as moving *candidate updates*, not BFS parents specifically, and
+the DGL ``gspmm`` idiom (op x reduce as parameters over one sparse kernel)
+shows how a single engine serves many vertex programs.  This module makes
+that generalization a fifth registry axis next to wire plans, traversal
+policies, expansion backends and codecs: a :class:`FrontierAlgebra` owns
+
+* the **message** each frontier source proposes along an edge
+  (:meth:`FrontierAlgebra.edge_message`),
+* the **combine** semiring operator that merges candidate messages — on
+  the wire, in the butterfly's per-hop union-merge, and in the local
+  segment reduce (:meth:`combine` / :meth:`segment_combine`),
+* the **update / activation** rule deciding which vertices improved and
+  what the next frontier is (:meth:`update` / :meth:`post_update`),
+* the **termination** predicate (fixed point, empty frontier, or an
+  L1-residual threshold carried by its own recorded all-reduce).
+
+Everything on the wire stays int32.  Min-algebras (``bfs``, ``sssp``,
+``cc``) use ``INF`` as the absent sentinel and ride the existing min-merge
+collectives *verbatim* — the ``bfs`` instance is the current behavior,
+extracted, and produces bit-identical results.  The sum-algebra
+(``pagerank``) transports float32 values losslessly as their int32 bit
+patterns (``enc``/``dec``); its absent sentinel is 0, whose bit pattern
+decodes to 0.0, so sum-combines may simply decode, add and re-encode
+without masking.
+
+Four instances register here (resolved by name through
+:func:`repro.comm.registry.algebra`):
+
+``bfs``       min-parent: message = source id, payload IS the id (wires may
+              localize/re-globalize it), activation = first touch.
+``sssp``      min-plus over int32 distances with deterministic synthesized
+              edge weights (:func:`edge_weight`); delta-stepping buckets
+              ride a ``pending`` carry plus a recorded global ``pmin``
+              window — the frontier is the pending set within ``delta`` of
+              the global minimum tentative distance.
+``cc``        min-label propagation from a dense initial frontier until no
+              label changes (connected components).
+``pagerank``  plus-times SpMV iteration: x = v/deg, combine = sum,
+              v' = (1-d)/n + d * sum, terminated by a global L1-residual
+              psum against ``tol``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm import registry as wire_registry
+from repro.comm.butterfly import width_class
+from repro.comm.formats import INF
+
+
+def edge_weight(u, v, max_weight: int = 31, xp=jnp):
+    """Deterministic symmetric integer weight of edge (u, v), in [1, max_weight].
+
+    A uint32 avalanche mix over the sorted global endpoint pair —
+    parameterized over the array namespace (``jnp`` in-graph, ``np`` for the
+    host Dijkstra oracle) so both sides wrap identically mod 2**32 and the
+    reference comparison is exact.  Symmetry (min/max ordering) matches the
+    undirected edge lists both drivers traverse.
+    """
+    # atleast_1d: numpy scalars warn on uint32 wraparound, arrays wrap silently.
+    a = xp.atleast_1d(xp.minimum(u, v)).astype(xp.uint32)
+    b = xp.atleast_1d(xp.maximum(u, v)).astype(xp.uint32)
+    h = a * xp.uint32(2654435761) ^ (b * xp.uint32(40503) + xp.uint32(2654435769))
+    h = h ^ (h >> xp.uint32(16))
+    w = (h % xp.uint32(max_weight)).astype(xp.int32) + 1
+    return w.reshape(xp.broadcast_shapes(xp.shape(u), xp.shape(v)))
+
+
+class _LocalExchange:
+    """Engine facade for the single-device driver: group size 1, so the
+    algebra's consensus collectives (psum / pmin) are identities."""
+
+    def psum(self, x, **kw):
+        return x
+
+    def pmin(self, x, **kw):
+        return x
+
+
+LOCAL_EXCHANGE = _LocalExchange()
+
+
+@dataclasses.dataclass(frozen=True)
+class FrontierAlgebra:
+    """One vertex program's semiring + activation rule (see module doc).
+
+    Frozen and hashable so instances can ride jit static arguments.  All
+    wire/carry planes are int32; ``enc``/``dec`` translate between the
+    algebra's value domain and the int32 transport (identity for the
+    integer min-algebras, float32 bit-casting for ``pagerank``).
+    """
+
+    name: str = ""
+    reduce: str = "min"  # "min" | "sum": the combine operator's shape
+    payload_is_id: bool = False  # wires may localize/re-globalize the payload
+    needs_values: bool = False  # column phase must gather source values
+    needs_deg: bool = False  # driver must materialize the owned degree slice
+    starts_dense: bool = False  # initial frontier = every vertex
+    uses_weights: bool = False  # messages consult edge_weight
+
+    # --- transport ---------------------------------------------------------
+
+    @property
+    def empty(self) -> int:
+        """Absent-candidate sentinel on the int32 wire."""
+        return INF if self.reduce == "min" else 0
+
+    def enc(self, x):
+        return x
+
+    def dec(self, x):
+        return x
+
+    def present(self, cand):
+        """Mask of slots holding a real candidate (vs the sentinel)."""
+        if self.reduce == "min":
+            return cand < INF
+        return cand != 0
+
+    # --- semiring ----------------------------------------------------------
+
+    def combine(self, a, b):
+        if self.reduce == "min":
+            return jnp.minimum(a, b)
+        return self.enc(self.dec(a) + self.dec(b))
+
+    def segment_combine(self, vals, segs, num_segments: int):
+        """Per-destination reduce of candidate messages (local expansion).
+
+        Sum needs no absent-mask: the sentinel 0 decodes to 0.0 and is the
+        additive identity."""
+        if self.reduce == "min":
+            return jax.ops.segment_min(vals, segs, num_segments=num_segments)
+        return self.enc(
+            jax.ops.segment_sum(self.dec(vals), segs, num_segments=num_segments)
+        )
+
+    def row_payload_width(self, n_c: int, n: int) -> int:
+        """Bit-packing class of the row wire's candidate payload."""
+        return 32
+
+    # --- messages ----------------------------------------------------------
+
+    def source_values(self, value, deg):
+        """Per-source message operand x from the owned value plane."""
+        return value
+
+    def edge_message(self, x_src, src_g, dst_g):
+        """Candidate an edge proposes to its destination (encoded)."""
+        return x_src
+
+    # --- state -------------------------------------------------------------
+
+    def init(self, hit, idx_global, roots32, n: int):
+        """Initial (value, frontier) planes for the owned chunk."""
+        raise NotImplementedError
+
+    def init_aux(self, frontier) -> tuple:
+        """Algebra-private level-loop carry (static pytree structure)."""
+        return ()
+
+    def update(self, value, cand, depth, n: int):
+        """Fold reduced candidates into the value plane -> (value', new)."""
+        raise NotImplementedError
+
+    def pull_mask(self, value):
+        """Destinations that accumulate candidates in pull expansion."""
+        return jnp.ones(value.shape, bool)
+
+    def post_update(
+        self, ex, aux, value_prev, value, new, frontier_prev, plane_counts
+    ):
+        """Next (aux, frontier, counts, alive) after a level's update.
+
+        ``ex`` exposes recorded ``psum``/``pmin`` over the whole grid (the
+        termination exchange; :data:`LOCAL_EXCHANGE` on the single-device
+        driver); ``plane_counts`` is the popcount kernel.  The algebra owns
+        ALL of its termination consensus: every collective recorded here
+        must feed ``alive`` or the next frontier, or XLA dead-code
+        eliminates it and the CommStats/HLO reconciliation breaks.
+        Default: fixed-point iteration — the frontier is what improved,
+        and the program stops when nothing did.
+        """
+        counts = ex.psum(plane_counts(new), fmt="termination")
+        return aux, new, counts, jnp.any(counts > 0)
+
+    def finalize(self, value):
+        """Decode the owned value plane into the algebra's output domain."""
+        return value
+
+
+@dataclasses.dataclass(frozen=True)
+class BfsAlgebra(FrontierAlgebra):
+    """Min-parent BFS: the pre-refactor driver's triple, extracted.
+
+    The payload is the source id itself, so wires may strip it to a
+    column-local offset and re-globalize on the receiver
+    (``payload_is_id``), and no value gather is needed — membership bits
+    carry the whole message."""
+
+    name: str = "bfs"
+    payload_is_id: bool = True
+
+    def row_payload_width(self, n_c: int, n: int) -> int:
+        return width_class(n_c)
+
+    def init(self, hit, idx_global, roots32, n: int):
+        value = jnp.where(hit, roots32[:, None], jnp.int32(-1))
+        return value, hit
+
+    def update(self, value, cand, depth, n: int):
+        new = (cand < INF) & (value < 0)
+        return jnp.where(new, cand, value), new
+
+    def pull_mask(self, value):
+        return value < 0
+
+
+@dataclasses.dataclass(frozen=True)
+class SsspAlgebra(FrontierAlgebra):
+    """Min-plus single-source shortest paths with delta-stepping windows.
+
+    Distances are int32 fixed point (INF = unreached); weights come from
+    :func:`edge_weight` so the host Dijkstra oracle can re-derive them.
+    The ``pending`` aux plane holds every vertex whose tentative distance
+    improved but whose out-edges have not been relaxed at that distance;
+    each level relaxes the pending set within ``delta`` of the global
+    minimum tentative distance (a recorded ``pmin``) — ``delta = INF``
+    degenerates to chaotic Bellman-Ford, small ``delta`` approaches
+    Dijkstra's settled order.  Termination: no pending vertex anywhere
+    (the window ``pmin`` comes back INF)."""
+
+    name: str = "sssp"
+    needs_values: bool = True
+    uses_weights: bool = True
+    delta: int = 31
+    max_weight: int = 31
+
+    def init(self, hit, idx_global, roots32, n: int):
+        value = jnp.where(hit, jnp.int32(0), jnp.int32(INF))
+        return value, hit
+
+    def init_aux(self, frontier) -> tuple:
+        return (frontier,)
+
+    def edge_message(self, x_src, src_g, dst_g):
+        w = edge_weight(src_g, dst_g, self.max_weight)
+        return jnp.where(x_src >= INF - w, INF, x_src + w)
+
+    def update(self, value, cand, depth, n: int):
+        new = cand < value
+        return jnp.minimum(value, cand), new
+
+    def post_update(
+        self, ex, aux, value_prev, value, new, frontier_prev, plane_counts
+    ):
+        (pending,) = aux
+        pending = (pending & ~frontier_prev) | new
+        local_min = jnp.min(
+            jnp.where(pending, value, INF), axis=1
+        )  # (B,) per-plane window floor
+        m = ex.pmin(local_min, fmt="window")
+        thresh = jnp.where(m >= INF - self.delta, INF, m + self.delta)
+        frontier = pending & (value <= thresh[:, None])
+        counts = ex.psum(plane_counts(frontier), fmt="frontier")
+        # the vertex attaining the global window floor m is always in the
+        # frontier, so counts>0 <=> m<INF — termination rides the counts
+        # psum and both recorded collectives stay live in the HLO
+        return (pending,), frontier, counts, jnp.any(counts > 0)
+
+
+@dataclasses.dataclass(frozen=True)
+class CcAlgebra(FrontierAlgebra):
+    """Min-label propagation: every vertex starts labelled with its own
+    global id and a dense frontier; labels flow along edges under min until
+    a fixed point — each component converges to its minimum vertex id.
+    Ignores the roots (batch planes compute the same labelling)."""
+
+    name: str = "cc"
+    needs_values: bool = True
+    starts_dense: bool = True
+
+    def row_payload_width(self, n_c: int, n: int) -> int:
+        return width_class(n)  # labels are global vertex ids
+
+    def init(self, hit, idx_global, roots32, n: int):
+        b = hit.shape[0]
+        value = jnp.broadcast_to(idx_global[None, :], (b, hit.shape[1]))
+        return value.astype(jnp.int32), jnp.ones(hit.shape, bool)
+
+    def update(self, value, cand, depth, n: int):
+        new = cand < value
+        return jnp.minimum(value, cand), new
+
+
+@dataclasses.dataclass(frozen=True)
+class PageRankAlgebra(FrontierAlgebra):
+    """Plus-times PageRank: x = v/deg, v' = (1-d)/n + d * sum(x over
+    in-edges), iterated to an L1 residual below ``tol`` (a recorded global
+    psum).  float32 values ride the int32 wire as bit patterns — width-32
+    bit-packing is the identity, so transport is lossless.  Vertices with
+    no out-edges contribute nothing (dangling mass is not redistributed —
+    the host oracle applies the same rule)."""
+
+    name: str = "pagerank"
+    reduce: str = "sum"
+    needs_values: bool = True
+    needs_deg: bool = True
+    starts_dense: bool = True
+    damping: float = 0.85
+    tol: float = 1e-4
+
+    def enc(self, x):
+        return jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.int32)
+
+    def dec(self, x):
+        return jax.lax.bitcast_convert_type(x, jnp.float32)
+
+    def init(self, hit, idx_global, roots32, n: int):
+        b, s = hit.shape
+        v0 = jnp.full((b, s), 1.0 / n, jnp.float32)
+        return self.enc(v0), jnp.ones((b, s), bool)
+
+    def source_values(self, value, deg):
+        v = self.dec(value)
+        x = jnp.where(deg[None, :] > 0, v / jnp.maximum(deg[None, :], 1), 0.0)
+        return self.enc(x)
+
+    def update(self, value, cand, depth, n: int):
+        v = (1.0 - self.damping) / n + self.damping * self.dec(cand)
+        value_new = self.enc(v)
+        return value_new, value_new != value
+
+    def post_update(
+        self, ex, aux, value_prev, value, new, frontier_prev, plane_counts
+    ):
+        res_local = jnp.sum(
+            jnp.abs(self.dec(value) - self.dec(value_prev)), axis=1
+        )  # (B,) L1 residual share of the owned chunk
+        res = ex.psum(res_local, fmt="residual")
+        frontier = jnp.ones(value.shape, bool)
+        # the frontier is dense every round, so its counts are a local
+        # constant — only the residual consensus goes over the wire
+        return aux, frontier, plane_counts(frontier), jnp.any(res > self.tol)
+
+    def finalize(self, value):
+        return self.dec(value)
+
+
+ALGEBRAS = ("bfs", "sssp", "cc", "pagerank")
+
+for _a in (BfsAlgebra(), SsspAlgebra(), CcAlgebra(), PageRankAlgebra()):
+    wire_registry.register_algebra(_a)
+del _a
+
+
+def resolve(algebra) -> FrontierAlgebra:
+    """Resolve by registry name, or pass a FrontierAlgebra instance through
+    (parameterized instances — a custom ``delta`` or ``tol`` — need no
+    registration)."""
+    if isinstance(algebra, FrontierAlgebra):
+        return algebra
+    return wire_registry.algebra(algebra)

@@ -36,6 +36,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import algebra as algebra_mod
 from repro.core import expand as expand_mod
 from repro.core import traversal
 
@@ -49,13 +50,14 @@ class BFSResult(NamedTuple):
 
 
 class _State(NamedTuple):
-    parent: jax.Array  # (B, n)
+    value: jax.Array  # (B, n) algebra state plane (BFS: parent ids)
     level: jax.Array  # (B, n)
     frontier: jax.Array  # (B, n) bool
     depth: jax.Array
     active: jax.Array  # scalar bool: any plane still expanding
     use_bu: jax.Array  # (B,) bool: plane expands bottom-up next level
     counts: jax.Array  # (B,) int32 frontier sizes (m_f growing-guard carry)
+    aux: tuple  # algebra-private carry (SSSP's pending set; () otherwise)
 
 
 def validate_roots(roots, n: int):
@@ -111,18 +113,21 @@ def hub_roots(degrees, n_roots: int) -> np.ndarray:
     return order[:n_roots].astype(np.int64)
 
 
-def _init_state(roots: jax.Array, n: int, policy: traversal.TraversalPolicy) -> _State:
+def _init_state(roots: jax.Array, n: int, policy: traversal.TraversalPolicy,
+                alg: algebra_mod.FrontierAlgebra) -> _State:
     b = roots.shape[0]
     idx = jnp.arange(n, dtype=jnp.int32)
     hit = idx[None, :] == roots[:, None]
+    value, frontier = alg.init(hit, idx, roots.astype(jnp.int32), n)
     return _State(
-        parent=jnp.where(hit, roots[:, None].astype(jnp.int32), -1),
+        value=value,
         level=jnp.where(hit, 0, -1).astype(jnp.int32),
-        frontier=hit,
+        frontier=frontier,
         depth=jnp.int32(0),
         active=jnp.bool_(True),
         use_bu=jnp.broadcast_to(jnp.bool_(policy.starts_bottom_up), (b,)),
         counts=jnp.ones((b,), jnp.int32),
+        aux=alg.init_aux(frontier),
     )
 
 
@@ -167,25 +172,29 @@ def _expansion_extra(src, dst, n: int, expand: str):
 
 
 @functools.partial(
-    jax.jit, static_argnames=("n", "policy", "max_levels", "expand")
+    jax.jit, static_argnames=("n", "policy", "max_levels", "expand", "algebra")
 )
-def _bfs_batched(src, dst, roots, n, policy, max_levels, expand, extra):
+def _bfs_batched(src, dst, roots, n, policy, max_levels, expand, extra,
+                 algebra="bfs"):
     pol = traversal.resolve(policy)
+    alg = algebra_mod.resolve(algebra)
     backend = expand_mod.resolve(expand)
     block = backend.local_block(src, dst, extra, n, n)
     oracle = traversal.DensityOracle(n)
-    # anticipatory direction oracle: the degree vector is computed once
-    # before the level loop and only when the policy actually switches
+    # the degree vector is computed once before the level loop, and only
+    # when something consumes it: the anticipatory direction oracle or the
+    # plus-times algebra's x = v/deg source messages
     deg = None
-    if pol.uses_top_down and pol.uses_bottom_up:
+    if (pol.uses_top_down and pol.uses_bottom_up) or alg.needs_deg:
         deg = traversal.degree_vector(src, dst, n, n)
     out = jax.lax.while_loop(
         lambda s: s.active & (s.depth < max_levels),
         lambda s: traversal.level_once(src, dst, n, pol, oracle, s, deg=deg,
-                                       expand=backend, block=block),
-        _init_state(roots, n, pol),
+                                       expand=backend, block=block, alg=alg),
+        _init_state(roots, n, pol, alg),
     )
-    return BFSResult(parent=out.parent, level=out.level, n_levels=out.depth)
+    return BFSResult(parent=alg.finalize(out.value), level=out.level,
+                     n_levels=out.depth)
 
 
 def bfs(
@@ -196,6 +205,7 @@ def bfs(
     policy: str = "top_down",
     max_levels: int = 64,
     expand: str = "coo",
+    algebra="bfs",
 ) -> BFSResult:
     """BFS over a symmetric COO edge list (padding edges may use src=dst=n).
 
@@ -216,12 +226,18 @@ def bfs(
       expand: local-expansion backend name (``coo`` | ``ell`` | ``hybrid``
         | ``auto``, see :mod:`repro.core.expand`) — all backends return
         bit-identical parent/level arrays.
+      algebra: frontier algebra name or instance (``bfs`` | ``sssp`` |
+        ``cc`` | ``pagerank``, see :mod:`repro.core.algebra`).  For value
+        algebras the ``parent`` field of the result carries the finalized
+        value plane (SSSP distances, CC labels, PageRank scores) and
+        ``level`` the round each vertex last improved.
     """
     roots = validate_roots(root, n)
     squeeze = roots.ndim == 0
     extra = _expansion_extra(src, dst, n, expand)
     res = _bfs_batched(
-        src, dst, jnp.atleast_1d(roots), n, policy, max_levels, expand, extra
+        src, dst, jnp.atleast_1d(roots), n, policy, max_levels, expand, extra,
+        algebra=algebra,
     )
     if squeeze:
         return BFSResult(res.parent[0], res.level[0], res.n_levels)
@@ -233,6 +249,7 @@ def bfs(
 )
 def _bfs_levels_batched(src, dst, roots, n, max_levels, policy, expand, extra):
     pol = traversal.resolve(policy)
+    alg = algebra_mod.resolve("bfs")
     backend = expand_mod.resolve(expand)
     block = backend.local_block(src, dst, extra, n, n)
     oracle = traversal.DensityOracle(n)
@@ -244,16 +261,16 @@ def _bfs_levels_batched(src, dst, roots, n, max_levels, policy, expand, extra):
         state = jax.lax.cond(
             state.active,
             lambda s: traversal.level_once(src, dst, n, pol, oracle, s, deg=deg,
-                                           expand=backend, block=block),
+                                           expand=backend, block=block, alg=alg),
             lambda s: s._replace(active=jnp.bool_(False)),
             state,
         )
         return state, jnp.sum(state.frontier.astype(jnp.int32), axis=1)
 
     out, sizes = jax.lax.scan(
-        body, _init_state(roots, n, pol), None, length=max_levels
+        body, _init_state(roots, n, pol, alg), None, length=max_levels
     )
-    return BFSResult(parent=out.parent, level=out.level, n_levels=out.depth), sizes
+    return BFSResult(parent=out.value, level=out.level, n_levels=out.depth), sizes
 
 
 def bfs_levels(

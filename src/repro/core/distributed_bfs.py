@@ -55,7 +55,9 @@ from jax.sharding import PartitionSpec as P
 
 from repro import compat
 from repro.comm import AdaptiveExchange, CommStats, ThresholdPolicy
+from repro.comm import collectives as comm_cc
 from repro.comm import registry as wire_registry
+from repro.core import algebra as algebra_mod
 from repro.core import bfs, traversal
 from repro.core import expand as expand_mod
 from repro.core.csr import BlockedGraph, Partition2D
@@ -70,6 +72,10 @@ class DistBFSConfig:
     mode: str = "auto"  # wire-plan name: 'raw' | 'bitmap' | 'auto' | 'btfly'
     policy: str = "top_down"  # traversal: 'top_down' | 'bottom_up' | 'direction_opt'
     expand: str = "coo"  # local expansion: 'coo' | 'ell' | 'hybrid' | 'auto'
+    #: frontier algebra: 'bfs' | 'sssp' | 'cc' | 'pagerank', or a
+    #: FrontierAlgebra instance (custom delta/tol).  Phase names in the
+    #: CommStats ledger are prefixed with the algebra's name.
+    algebra: object = "bfs"
     alpha: float | None = None  # BU entry density; None = derive from the ladder
     beta: float = 0.05  # BU exit density (hysteresis)
     max_levels: int = 64
@@ -87,13 +93,14 @@ def parent_width_class(n_c: int) -> int:
 
 
 class _Carry(NamedTuple):
-    parent: jax.Array  # (B, s) int32 global parent ids, -1 unreached
+    value: jax.Array  # (B, s) int32 algebra state plane (BFS: parent ids)
     level: jax.Array  # (B, s) int32
     frontier: jax.Array  # (B, s) bool
     depth: jax.Array
     active: jax.Array  # scalar bool: any plane still expanding
     use_bu: jax.Array  # (B,) bool: plane expands bottom-up next level
     counts: jax.Array  # (B,) int32 global frontier sizes (psum consensus)
+    aux: tuple  # algebra-private carry (SSSP's pending set; () otherwise)
 
 
 def _bfs_local(
@@ -123,8 +130,13 @@ def _bfs_local(
     j = jax.lax.axis_index(cfg.col_axis)
     q = i * c + j
     base = q * s
-    p_width = parent_width_class(n_c)
     perm = part.transpose_perm()
+
+    alg = algebra_mod.resolve(cfg.algebra)
+    p = alg.name  # CommStats phase prefix ("bfs/..." stays the seed ledger)
+    # the row wire's candidate payload: column-local parent offsets for the
+    # id algebra, the algebra's value class otherwise
+    p_width = alg.row_payload_width(n_c, part.n)
 
     policy = traversal.resolve(cfg.policy)
     adaptive = policy.uses_top_down and policy.uses_bottom_up
@@ -143,39 +155,51 @@ def _bfs_local(
     # and bucket consensus.
     plan = wire_registry.wire_plan(cfg.mode)
     column_gather = plan.build_column(
-        s, cfg.row_axes, r, b=b, policy=threshold, stats=stats, phase="bfs/column"
+        s, cfg.row_axes, r, b=b, policy=threshold, stats=stats,
+        phase=f"{p}/column",
     )
     row_exchange = row_exchange_bu = unreached_gather = None
     if policy.uses_top_down:
         row_exchange = plan.build_row(
             s, cfg.col_axis, c, n_c, p_width, b=b,
-            policy=threshold, stats=stats, phase="bfs/row",
+            policy=threshold, stats=stats, phase=f"{p}/row", alg=alg,
         )
     if policy.uses_bottom_up:
         row_exchange_bu = plan.build_row_bu(
             s, cfg.col_axis, c, n_c, p_width, b=b,
-            policy=threshold, stats=stats, phase="bfs/row-pull",
+            policy=threshold, stats=stats, phase=f"{p}/row-pull", alg=alg,
         )
         unreached_gather = plan.build_unreached(
             s, cfg.col_axis, c, b=b,
-            policy=threshold, stats=stats, phase="bfs/unreached",
+            policy=threshold, stats=stats, phase=f"{p}/unreached",
         )
     # non-adaptive exchanges report through the same engine facade; the
     # termination psum carries all B plane counts in one all-reduce (plus,
     # for adaptive policies, a float32 m_f/m_u companion — same total words
     # as stacking, but the edge dots cannot ride int32 at Graph500 scales)
-    ex_transpose = AdaptiveExchange("bfs/transpose", cfg.all_axes, r * c, None,
+    ex_transpose = AdaptiveExchange(f"{p}/transpose", cfg.all_axes, r * c, None,
                                     stats, planes=b)
-    ex_term = AdaptiveExchange("bfs/termination", cfg.all_axes, r * c, None,
+    ex_term = AdaptiveExchange(f"{p}/termination", cfg.all_axes, r * c, None,
                                stats, planes=b)
+    ex_values = None
+    if alg.needs_values:
+        # value algebras ride a second column phase: the owned value plane
+        # takes the same transpose permute, then a dense int32 all-gather
+        # assembles the (B, n_c) source-value slice next to the membership
+        # bits (value-plane packing is width-32, so dense IS the packed
+        # representation; the ledger prices it under "{p}/values")
+        ex_values = AdaptiveExchange(f"{p}/values", cfg.row_axes, r, None,
+                                     stats, planes=b)
 
     deg_own = None
-    if adaptive:
-        # anticipatory direction oracle (Beamer m_f): psum the owned-degree
-        # vector ONCE before the level loop — one grid-row all-reduce whose
-        # cost is shared by every source plane — then feed the frontier
-        # edge count into the per-level direction decision
-        ex_degree = AdaptiveExchange("bfs/degree", cfg.col_axis, c, None, stats)
+    if (adaptive and alg.payload_is_id) or alg.needs_deg:
+        # anticipatory direction oracle (Beamer m_f, id payloads only) and
+        # the plus-times algebra's x = v/deg both need the owned-degree
+        # vector: psum it ONCE before the level loop — one grid-row
+        # all-reduce whose cost is shared by every source plane.  Gated on
+        # actual consumption: a recorded-but-dead psum would be DCE'd from
+        # the HLO and break the ledger reconciliation.
+        ex_degree = AdaptiveExchange(f"{p}/degree", cfg.col_axis, c, None, stats)
         deg_slice = traversal.degree_vector(src_l, dst_l, n_c, n_r)
         deg_row = ex_degree.psum(deg_slice, fmt="degree")
         deg_own = jax.lax.dynamic_slice(deg_row, (j * s,), (s,))
@@ -198,6 +222,8 @@ def _bfs_local(
         row_exchange=row_exchange,
         row_exchange_bu=row_exchange_bu,
         unreached_gather=unreached_gather,
+        algebra=alg,
+        row_base=i * n_r,
     )
 
     idx_global = base + jnp.arange(s, dtype=jnp.int32)
@@ -206,48 +232,62 @@ def _bfs_local(
     def level_step(carry: _Carry) -> _Carry:
         # 1. TransposeVector: all B frontier planes in one permute
         bits_t = ex_transpose.ppermute(carry.frontier, perm, fmt="membership")
-        # 2. column phase: assemble f_j (B, n_c) membership planes
+        # 2. column phase: assemble f_j (B, n_c) membership planes — and,
+        # for value algebras, the matching (B, n_c) source-value planes
         f_col = column_gather(bits_t)
+        x_col = None
+        if alg.needs_values:
+            x_own = alg.source_values(carry.value, deg_own)
+            x_t = ex_transpose.ppermute(x_own, perm, fmt="values")
+            x_col = comm_cc.gather_values_planes(ex_values, x_t)
         # 3+4. policy-directed local expansion + row exchange (per-plane
         # direction; planes with empty frontiers ride as masked planes)
         reduced = policy.expand_dist(
-            ctx, carry.parent, f_col, carry.use_bu, carry.counts > 0
+            ctx, carry.value, f_col, carry.use_bu, carry.counts > 0,
+            x_col=x_col,
         )
-        # 5. update owned state; the per-plane popcounts feed the
-        # termination test and (for direction_opt) each plane's direction
-        new = (reduced < INF) & (carry.parent < 0)
-        n_new = ex_term.psum(oracle.plane_counts(new), fmt="termination")
+        # 5. fold candidates into the owned state through the algebra; the
+        # psum-ed improvement counts feed the termination test and (for
+        # direction_opt) each plane's direction
+        value, new = alg.update(carry.value, reduced, carry.depth, part.n)
         m_f = m_u = None
-        if adaptive:
-            lm_f, lm_u = traversal.edge_signals(deg_own, new, carry.parent)
+        if adaptive and alg.payload_is_id:
+            lm_f, lm_u = traversal.edge_signals(deg_own, new, carry.value)
             edges = ex_term.psum(
                 jnp.stack([lm_f, lm_u], axis=1), fmt="termination", part="edges"
             )
             m_f, m_u = edges[:, 0], edges[:, 1]
+        aux, frontier, counts, alive = alg.post_update(
+            ex_term, carry.aux, carry.value, value, new, carry.frontier,
+            oracle.plane_counts,
+        )
         return _Carry(
-            parent=jnp.where(new, reduced, carry.parent),
+            value=value,
             level=jnp.where(new, carry.depth + 1, carry.level),
-            frontier=new,
+            frontier=frontier,
             depth=carry.depth + 1,
-            active=jnp.any(n_new > 0) & (carry.depth + 1 < cfg.max_levels),
-            use_bu=policy.next_direction(oracle, n_new, carry.use_bu,
+            active=alive & (carry.depth + 1 < cfg.max_levels),
+            use_bu=policy.next_direction(oracle, counts, carry.use_bu,
                                          m_f=m_f, m_u=m_u,
-                                         growing=n_new > carry.counts),
-            counts=n_new,
+                                         growing=counts > carry.counts),
+            counts=counts,
+            aux=aux,
         )
 
     hit = idx_global[None, :] == roots32[:, None]  # (B, s)
+    value0, frontier0 = alg.init(hit, idx_global, roots32, part.n)
     init = _Carry(
-        parent=jnp.where(hit, roots32[:, None], jnp.int32(-1)),
+        value=value0,
         level=jnp.where(hit, 0, -1).astype(jnp.int32),
-        frontier=hit,
+        frontier=frontier0,
         depth=jnp.int32(0),
         active=jnp.bool_(True),
         use_bu=jnp.broadcast_to(jnp.bool_(policy.starts_bottom_up), (b,)),
         counts=jnp.ones((b,), jnp.int32),
+        aux=alg.init_aux(frontier0),
     )
     out = jax.lax.while_loop(lambda s_: s_.active, level_step, init)
-    return out.parent, out.level, out.depth
+    return alg.finalize(out.value), out.level, out.depth
 
 
 def build_bfs(
@@ -284,6 +324,7 @@ def build_bfs(
     wire_registry.wire_plan(cfg.mode)  # fail on unknown modes at build time
     policy = wire_registry.traversal(cfg.policy)  # ... and unknown policies
     backend = expand_mod.resolve(cfg.expand)  # ... and unknown backends
+    algebra_mod.resolve(cfg.algebra)  # ... and unknown algebras
     part = bg if isinstance(bg, Partition2D) else bg.part
     assert part.rows == functools.reduce(
         lambda a, b: a * b, (mesh.shape[a] for a in cfg.row_axes)

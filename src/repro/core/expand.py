@@ -133,6 +133,56 @@ def _ell_pull(nbr, n_cols: int, f, unreached):
     )
 
 
+def _coo_push_value(src, dst, n_rows, n_cols, f, x, alg, row_base, col_base):
+    """Value-algebra push over COO edges: each active edge proposes
+    ``alg.edge_message`` of its source's value, reduced per destination
+    with the algebra's combine (column-LOCAL frontier, GLOBAL payload)."""
+
+    def one(fp, xp):
+        s_cl = jnp.clip(src, 0, n_cols - 1)
+        act = fp[s_cl] & (src < n_cols)
+        msg = alg.edge_message(xp[s_cl], src + col_base, dst + row_base)
+        cand = jnp.where(act, msg, alg.empty)
+        return alg.segment_combine(cand, dst, n_rows + 1)[:n_rows]
+
+    return jax.vmap(one)(f, x)
+
+
+def _coo_pull_value(src, dst, n_rows, n_cols, f, unreached, x, alg,
+                    row_base, col_base):
+    """Value-algebra pull over COO edges: the frontier is probed through
+    its packed bitmap and only ``unreached``-masked destinations (the
+    algebra's pull mask) accumulate candidates."""
+    n_cp = _chunk_pad(n_cols)
+    words = _pack_planes(f)
+
+    def one(wp, un, xp):
+        s_cl = jnp.clip(src, 0, n_cols - 1)
+        hit = spmv_ref.frontier_bit(wp, src, n_cp) & (src < n_cols)
+        pull = un[jnp.clip(dst, 0, n_rows - 1)] & (dst < n_rows)
+        msg = alg.edge_message(xp[s_cl], src + col_base, dst + row_base)
+        cand = jnp.where(hit & pull, msg, alg.empty)
+        return alg.segment_combine(cand, dst, n_rows + 1)[:n_rows]
+
+    return jax.vmap(one)(words, unreached, x)
+
+
+def _ell_push_value(nbr, n_cols: int, f, x, alg, row_base, col_base):
+    """ELL value push through the op x reduce gspmm dispatch."""
+    return spmv_ops.gspmm_planes(
+        nbr, _pack_planes(f), x, _chunk_pad(n_cols), alg,
+        row_base=row_base, col_base=col_base,
+    )
+
+
+def _ell_pull_value(nbr, n_cols: int, f, unreached, x, alg, row_base, col_base):
+    """ELL value pull: masked destinations collapse to the empty sentinel."""
+    return spmv_ops.gspmm_planes(
+        nbr, _pack_planes(f), x, _chunk_pad(n_cols), alg,
+        row_base=row_base, col_base=col_base, u_words=_pack_planes(unreached),
+    )
+
+
 class ExpansionBackend:
     """One local-expansion data structure (or a degree split over two).
 
@@ -168,6 +218,18 @@ class ExpansionBackend:
     def pull_planes(self, blk: LocalBlock, f, unreached):
         raise NotImplementedError
 
+    def push_value_planes(self, blk: LocalBlock, f, x, alg, *, row_base=0,
+                          col_base=0):
+        """Value-algebra push: (B, n_cols) frontier + value planes ->
+        (B, n_rows) combined candidate values (``alg.empty`` where none).
+        ``row_base``/``col_base`` globalize the block-local ids for the
+        algebra's edge messages."""
+        raise NotImplementedError
+
+    def pull_value_planes(self, blk: LocalBlock, f, unreached, x, alg, *,
+                          row_base=0, col_base=0):
+        raise NotImplementedError
+
     def describe(self, bg: csrmod.BlockedGraph) -> list[dict]:
         """Per-block split/padding report (the example's --expand print)."""
         return []
@@ -185,6 +247,19 @@ class CooExpansion(ExpansionBackend):
 
     def pull_planes(self, blk, f, unreached):
         return _coo_pull(blk.src, blk.dst, blk.n_rows, blk.n_cols, f, unreached)
+
+    def push_value_planes(self, blk, f, x, alg, *, row_base=0, col_base=0):
+        return _coo_push_value(
+            blk.src, blk.dst, blk.n_rows, blk.n_cols, f, x, alg,
+            row_base, col_base,
+        )
+
+    def pull_value_planes(self, blk, f, unreached, x, alg, *, row_base=0,
+                          col_base=0):
+        return _coo_pull_value(
+            blk.src, blk.dst, blk.n_rows, blk.n_cols, f, unreached, x, alg,
+            row_base, col_base,
+        )
 
 
 class EllExpansion(ExpansionBackend):
@@ -210,6 +285,17 @@ class EllExpansion(ExpansionBackend):
 
     def pull_planes(self, blk, f, unreached):
         return _ell_pull(blk.nbr, blk.n_cols, f, unreached)
+
+    def push_value_planes(self, blk, f, x, alg, *, row_base=0, col_base=0):
+        return _ell_push_value(
+            blk.nbr, blk.n_cols, f, x, alg, row_base, col_base
+        )
+
+    def pull_value_planes(self, blk, f, unreached, x, alg, *, row_base=0,
+                          col_base=0):
+        return _ell_pull_value(
+            blk.nbr, blk.n_cols, f, unreached, x, alg, row_base, col_base
+        )
 
     def describe(self, bg):
         blocks = self._blocks(bg)
@@ -266,6 +352,29 @@ class HybridExpansion(ExpansionBackend):
         return jnp.minimum(
             _ell_pull(blk.nbr, blk.n_cols, f, unreached),
             _coo_pull(blk.src, blk.dst, blk.n_rows, blk.n_cols, f, unreached),
+        )
+
+    def push_value_planes(self, blk, f, x, alg, *, row_base=0, col_base=0):
+        # each row's edge set lives in exactly one structure, so the
+        # algebra's combine (min OR sum) merges the two halves exactly
+        return alg.combine(
+            _ell_push_value(blk.nbr, blk.n_cols, f, x, alg, row_base, col_base),
+            _coo_push_value(
+                blk.src, blk.dst, blk.n_rows, blk.n_cols, f, x, alg,
+                row_base, col_base,
+            ),
+        )
+
+    def pull_value_planes(self, blk, f, unreached, x, alg, *, row_base=0,
+                          col_base=0):
+        return alg.combine(
+            _ell_pull_value(
+                blk.nbr, blk.n_cols, f, unreached, x, alg, row_base, col_base
+            ),
+            _coo_pull_value(
+                blk.src, blk.dst, blk.n_rows, blk.n_cols, f, unreached, x, alg,
+                row_base, col_base,
+            ),
         )
 
     def describe(self, bg):

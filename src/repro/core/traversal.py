@@ -199,6 +199,8 @@ class DistLevelCtx(NamedTuple):
     row_exchange: Callable | None  # push: (B,c,s) global candidates -> (B,s) min
     row_exchange_bu: Callable | None  # pull: (B,c,s) LOCAL candidates -> (B,s)
     unreached_gather: Callable | None  # (B,s) own unreached -> (B,n_r) row slice
+    algebra: object = None  # FrontierAlgebra (None = historical min-parent BFS)
+    row_base: jax.Array | int = 0  # global id of this rank's first row (i*n_r)
 
 
 class TraversalPolicy:
@@ -223,11 +225,19 @@ class TraversalPolicy:
     uses_top_down: bool = True  # driver builds the push row exchange
     uses_bottom_up: bool = False  # driver builds the pull exchanges
 
-    def propose_batch(self, expand, block, parent, frontier, use_bu):
-        """(B, n) candidate planes for the single-device driver."""
+    def propose_batch(self, expand, block, value, frontier, use_bu,
+                      alg=None, x=None, plane_mask=None):
+        """(B, n) candidate planes for the single-device driver.
+
+        ``value`` is the algebra's state plane (the parent vector for BFS);
+        ``alg``/``x`` switch value algebras onto the backend's value
+        expansion (``x`` = the per-source message operands); ``plane_mask``
+        restricts the pull mask to the planes a gated pass serves.
+        """
         raise NotImplementedError
 
-    def expand_dist(self, ctx: DistLevelCtx, parent, f_col, use_bu, active):
+    def expand_dist(self, ctx: DistLevelCtx, value, f_col, use_bu, active,
+                    x_col=None, plane_mask=None):
         raise NotImplementedError
 
     def next_direction(self, oracle: DensityOracle, count, use_bu,
@@ -242,22 +252,36 @@ class TraversalPolicy:
 class TopDownPolicy(TraversalPolicy):
     name = "top_down"
 
-    def propose_batch(self, expand, block, parent, frontier, use_bu):
-        # push: every frontier source proposes itself to its neighbors
-        return expand.push_planes(block, frontier)
+    def propose_batch(self, expand, block, value, frontier, use_bu,
+                      alg=None, x=None, plane_mask=None):
+        # push: every frontier source proposes itself (or its value's edge
+        # message) to its neighbors
+        if alg is None or alg.payload_is_id:
+            return expand.push_planes(block, frontier)
+        return expand.push_value_planes(block, frontier, x, alg)
 
-    def _propose(self, ctx, f_col):
+    def _propose(self, ctx, f_col, x_col):
         """(B, n_c) frontier planes -> (B, c, s) global candidate planes.
 
-        The backend returns column-LOCAL min candidates; the push wire
-        carries global ids, and min commutes with the constant shift
-        ``j * n_c``, so globalizing after the min is exact."""
-        local = ctx.expand.push_planes(ctx.block, f_col)  # (B, n_r)
-        glob = jnp.where(local < INF, ctx.col_index * ctx.n_c + local, INF)
+        Id payloads: the backend returns column-LOCAL min candidates; the
+        push wire carries global ids, and min commutes with the constant
+        shift ``j * n_c``, so globalizing after the min is exact.  Value
+        payloads are already global — the backend's value expansion takes
+        the id bases only to derive edge messages."""
+        alg = ctx.algebra
+        if alg is None or alg.payload_is_id:
+            local = ctx.expand.push_planes(ctx.block, f_col)  # (B, n_r)
+            glob = jnp.where(local < INF, ctx.col_index * ctx.n_c + local, INF)
+        else:
+            glob = ctx.expand.push_value_planes(
+                ctx.block, f_col, x_col, alg,
+                row_base=ctx.row_base, col_base=ctx.col_index * ctx.n_c,
+            )
         return glob.reshape(-1, ctx.c, ctx.s)
 
-    def expand_dist(self, ctx, parent, f_col, use_bu, active):
-        return ctx.row_exchange(self._propose(ctx, f_col))
+    def expand_dist(self, ctx, value, f_col, use_bu, active,
+                    x_col=None, plane_mask=None):
+        return ctx.row_exchange(self._propose(ctx, f_col, x_col))
 
 
 class BottomUpPolicy(TraversalPolicy):
@@ -266,26 +290,41 @@ class BottomUpPolicy(TraversalPolicy):
     uses_top_down = False
     uses_bottom_up = True
 
-    def propose_batch(self, expand, block, parent, frontier, use_bu):
+    def propose_batch(self, expand, block, value, frontier, use_bu,
+                      alg=None, x=None, plane_mask=None):
         # pull: the backend probes the *packed* frontier bitmap (the
         # representation switch; kernels/spmv's vertical width-1 gather, or
-        # spmv_pull_min itself on the ELL slab), and only unreached
-        # destinations accumulate candidates
-        return expand.pull_planes(block, frontier, parent < 0)
+        # spmv_pull_min itself on the ELL slab), and only destinations in
+        # the algebra's pull mask accumulate candidates
+        mask = (value < 0) if alg is None else alg.pull_mask(value)
+        if plane_mask is not None:
+            mask = mask & plane_mask[:, None]
+        if alg is None or alg.payload_is_id:
+            return expand.pull_planes(block, frontier, mask)
+        return expand.pull_value_planes(block, frontier, mask, x, alg)
 
-    def expand_dist(self, ctx, parent, f_col, use_bu, active):
-        # unreached membership of the whole row slice, gathered as bitmap
+    def expand_dist(self, ctx, value, f_col, use_bu, active,
+                    x_col=None, plane_mask=None):
+        alg = ctx.algebra
+        # pull-mask membership of the whole row slice, gathered as bitmap
         # planes over the grid row — this replaces the id-stream ALLTOALLV.
-        # Exhausted planes are masked reached: their permanent unreached set
+        # Exhausted planes are masked out: their permanent unreached set
         # (often most of the graph) must not escalate the bucket consensus
         # the surviving planes' gather pays for, and the host replay prices
         # inactive planes as empty.
-        unreached = ctx.unreached_gather(
-            (parent < 0) & active[:, None]
-        )  # (B, n_r) bool
-        # candidates stay column-LOCAL so the wire payload bit-packs at the
-        # static column-width class; the receiver globalizes per sender
-        local = ctx.expand.pull_planes(ctx.block, f_col, unreached)
+        mask = (value < 0) if alg is None else alg.pull_mask(value)
+        pm = active if plane_mask is None else (plane_mask & active)
+        unreached = ctx.unreached_gather(mask & pm[:, None])  # (B, n_r) bool
+        if alg is None or alg.payload_is_id:
+            # candidates stay column-LOCAL so the wire payload bit-packs at
+            # the static column-width class; the receiver globalizes per
+            # sender
+            local = ctx.expand.pull_planes(ctx.block, f_col, unreached)
+        else:
+            local = ctx.expand.pull_value_planes(
+                ctx.block, f_col, unreached, x_col, alg,
+                row_base=ctx.row_base, col_base=ctx.col_index * ctx.n_c,
+            )
         return ctx.row_exchange_bu(local.reshape(-1, ctx.c, ctx.s))
 
 
@@ -311,64 +350,68 @@ class DirectionOptPolicy(TraversalPolicy):
         self._td = TopDownPolicy()
         self._bu = BottomUpPolicy()
 
-    def propose_batch(self, expand, block, parent, frontier, use_bu):
+    def propose_batch(self, expand, block, value, frontier, use_bu,
+                      alg=None, x=None, plane_mask=None):
         # mirror expand_dist: ONE gated pass per direction over all planes.
         # A per-plane lax.cond would turn into a select that runs both O(m)
         # expansions every level — even for a scalar root.  Planes routed
         # to the direction a pass does not serve ride it masked-empty, as
         # in the distributed exchange.
-        b, n = parent.shape
+        b, n = value.shape
+        empty = INF if alg is None else alg.empty
+        combine = jnp.minimum if alg is None else alg.combine
         act = jnp.any(frontier, axis=1)
         td_mask = (~use_bu) & act
         bu_mask = use_bu & act
-        inf_planes = lambda: jnp.full((b, n), INF, jnp.int32)  # noqa: E731
+        empty_planes = lambda: jnp.full((b, n), empty, jnp.int32)  # noqa: E731
         td = jax.lax.cond(
             jnp.any(td_mask),
             lambda: self._td.propose_batch(
-                expand, block, parent, frontier & td_mask[:, None], use_bu
+                expand, block, value, frontier & td_mask[:, None], use_bu,
+                alg=alg, x=x,
             ),
-            inf_planes,
+            empty_planes,
         )
-        # pull planes in push mode are masked reached so the pull pass
-        # proposes nothing for them
+        # the pull pass's mask is restricted to its planes, so it proposes
+        # nothing for planes riding the push direction
         bu = jax.lax.cond(
             jnp.any(bu_mask),
             lambda: self._bu.propose_batch(
-                expand, block,
-                jnp.where(bu_mask[:, None], parent, 0),
-                frontier & bu_mask[:, None],
-                use_bu,
+                expand, block, value, frontier & bu_mask[:, None], use_bu,
+                alg=alg, x=x, plane_mask=bu_mask,
             ),
-            inf_planes,
+            empty_planes,
         )
-        return jnp.minimum(td, bu)
+        return combine(td, bu)
 
-    def expand_dist(self, ctx, parent, f_col, use_bu, active):
-        b = parent.shape[0]
+    def expand_dist(self, ctx, value, f_col, use_bu, active,
+                    x_col=None, plane_mask=None):
+        b = value.shape[0]
+        alg = ctx.algebra
+        empty = INF if alg is None else alg.empty
+        combine = jnp.minimum if alg is None else alg.combine
         td_mask = (~use_bu) & active
         bu_mask = use_bu & active
-        inf_planes = lambda: jnp.full((b, ctx.s), INF, jnp.int32)  # noqa: E731
+        empty_planes = lambda: jnp.full((b, ctx.s), empty, jnp.int32)  # noqa: E731
         td = jax.lax.cond(
             jnp.any(td_mask),
             lambda: self._td.expand_dist(
-                ctx, parent, f_col & td_mask[:, None], use_bu, active
+                ctx, value, f_col & td_mask[:, None], use_bu, active,
+                x_col=x_col,
             ),
-            inf_planes,
+            empty_planes,
         )
-        # pull planes in push mode are masked reached so their unreached
-        # bitmap (and hence the pull wire's content) stays empty
+        # the pull pass's plane mask keeps push-direction planes out of the
+        # unreached bitmap (and hence out of the pull wire's content)
         bu = jax.lax.cond(
             jnp.any(bu_mask),
             lambda: self._bu.expand_dist(
-                ctx,
-                jnp.where(bu_mask[:, None], parent, 0),
-                f_col & bu_mask[:, None],
-                use_bu,
-                active,
+                ctx, value, f_col & bu_mask[:, None], use_bu, active,
+                x_col=x_col, plane_mask=bu_mask,
             ),
-            inf_planes,
+            empty_planes,
         )
-        return jnp.minimum(td, bu)
+        return combine(td, bu)
 
     def next_direction(self, oracle, count, use_bu, m_f=None, m_u=None,
                        growing=None):
@@ -377,42 +420,64 @@ class DirectionOptPolicy(TraversalPolicy):
 
 
 def level_once(src, dst, n, policy: TraversalPolicy, oracle: DensityOracle,
-               state, deg=None, expand=None, block=None):
-    """One single-device BFS level over every source plane.
+               state, deg=None, expand=None, block=None, alg=None):
+    """One single-device traversal level over every source plane.
 
-    The single shared implementation behind both ``bfs()`` and
-    ``bfs_levels()`` — ``state`` is any NamedTuple with parent / level /
+    The single shared implementation behind ``bfs()`` / ``bfs_levels()`` /
+    ``traverse()`` — ``state`` is any NamedTuple with value / level /
     frontier (all ``(B, n)``) / depth / active / use_bu / counts (``(B,)``)
-    fields.  The policy proposal runs plane-batched (``propose_batch``)
-    through the local-expansion backend ``expand`` over its prepared
-    ``block`` (default: the COO backend over the flat ``src``/``dst``
-    edge arrays); the per-plane popcounts come from one plane-blocked
-    kernel call.  ``deg``, if given, is the (n,) degree vector feeding the
-    anticipatory Beamer ``m_f`` signal (gated on a growing frontier, via
-    the counts carry) into the per-plane direction decision.
+    / aux fields.  The policy proposal runs plane-batched
+    (``propose_batch``) through the local-expansion backend ``expand`` over
+    its prepared ``block`` (default: the COO backend over the flat
+    ``src``/``dst`` edge arrays); the per-plane popcounts come from one
+    plane-blocked kernel call.  ``deg``, if given, is the (n,) degree
+    vector feeding the anticipatory Beamer ``m_f`` signal (gated on a
+    growing frontier, via the counts carry) into the per-plane direction
+    decision — and the plus-times algebra's per-source ``x = v/deg``.
+    ``alg`` is the :class:`repro.core.algebra.FrontierAlgebra`; ``None``
+    keeps the historical min-parent BFS triple.
     """
     if expand is None:
         expand = expand_mod.resolve("coo")
     if block is None:
         block = expand.local_block(src, dst, (), n, n)
+    x = None
+    if alg is not None and alg.needs_values:
+        x = alg.source_values(state.value, deg)
     proposed = policy.propose_batch(
-        expand, block, state.parent, state.frontier, state.use_bu
+        expand, block, state.value, state.frontier, state.use_bu,
+        alg=alg, x=x,
     )
-    new = (proposed < INF) & (state.parent < 0)
-    counts = oracle.plane_counts(new)
+    if alg is None:
+        new = (proposed < INF) & (state.value < 0)
+        value = jnp.where(new, proposed, state.value)
+    else:
+        value, new = alg.update(state.value, proposed, state.depth, n)
+    counts_new = oracle.plane_counts(new)
     m_f = m_u = growing = None
-    if deg is not None:
-        m_f, m_u = edge_signals(deg, new, state.parent)
-        growing = counts > state.counts
+    if deg is not None and (alg is None or alg.payload_is_id):
+        m_f, m_u = edge_signals(deg, new, state.value)
+        growing = counts_new > state.counts
+    if alg is None:
+        aux, frontier, counts = state.aux, new, counts_new
+        alive = jnp.any(counts_new > 0)
+    else:
+        from repro.core.algebra import LOCAL_EXCHANGE
+
+        aux, frontier, counts, alive = alg.post_update(
+            LOCAL_EXCHANGE, state.aux, state.value, value, new,
+            state.frontier, oracle.plane_counts,
+        )
     return state._replace(
-        parent=jnp.where(new, proposed, state.parent),
+        value=value,
         level=jnp.where(new, state.depth + 1, state.level),
-        frontier=new,
+        frontier=frontier,
         depth=state.depth + 1,
-        active=jnp.any(counts > 0),
+        active=alive,
         use_bu=policy.next_direction(oracle, counts, state.use_bu,
                                      m_f=m_f, m_u=m_u, growing=growing),
         counts=counts,
+        aux=aux,
     )
 
 

@@ -137,6 +137,91 @@ def reference_bfs(g: CSRGraph, root: int) -> np.ndarray:
     return level
 
 
+def reference_sssp(g: CSRGraph, root: int, max_weight: int = 31) -> np.ndarray:
+    """Host Dijkstra over the hashed edge weights — the SSSP oracle.
+
+    Weights come from :func:`repro.core.algebra.edge_weight` with ``xp=np``
+    so the uint32 avalanche mix wraps identically to the in-graph version
+    and the distance comparison is exact.  Unreached vertices hold
+    ``repro.comm.formats.INF`` to match the device driver's encoding.
+    """
+    import heapq
+
+    from repro.comm.formats import INF
+    from repro.core.algebra import edge_weight
+
+    dist = np.full(g.n, np.iinfo(np.int64).max, dtype=np.int64)
+    dist[root] = 0
+    pq = [(0, int(root))]
+    while pq:
+        du, u = heapq.heappop(pq)
+        if du > dist[u]:
+            continue
+        nbrs = g.col_idx[g.row_ptr[u] : g.row_ptr[u + 1]]
+        if nbrs.size == 0:
+            continue
+        w = edge_weight(
+            np.full(nbrs.size, u, np.int64), nbrs.astype(np.int64),
+            max_weight=max_weight, xp=np,
+        ).astype(np.int64)
+        for v, nd in zip(nbrs, du + w):
+            if nd < dist[v]:
+                dist[v] = nd
+                heapq.heappush(pq, (int(nd), int(v)))
+    return np.where(dist == np.iinfo(np.int64).max, np.int64(INF), dist)
+
+
+def reference_cc(g: CSRGraph) -> np.ndarray:
+    """Union-find min-label components — the connected-components oracle.
+
+    Returns, per vertex, the minimum vertex id of its component (the fixed
+    point of min-label propagation, so it compares exactly against the
+    ``cc`` algebra's value plane)."""
+    parent = np.arange(g.n, dtype=np.int64)
+
+    def find(x: int) -> int:
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    for u, v in zip(g.src, g.dst):
+        ru, rv = find(int(u)), find(int(v))
+        if ru != rv:
+            parent[max(ru, rv)] = min(ru, rv)
+    roots = np.array([find(i) for i in range(g.n)])
+    # path-compressed roots ARE the min ids: union always keeps the smaller
+    return roots
+
+
+def reference_pagerank(
+    g: CSRGraph, n: int | None = None, damping: float = 0.85,
+    tol: float = 1e-4, max_iter: int = 500,
+) -> np.ndarray:
+    """Host power iteration — the PageRank oracle.
+
+    Matches the ``pagerank`` algebra's conventions exactly: uniform init
+    1/n over the (padded) vertex count ``n``, dangling mass NOT
+    redistributed, termination on global L1 step-residual <= ``tol``.
+    Pass the driver's padded ``part.n`` as ``n`` to compare elementwise.
+    """
+    n = g.n if n is None else n
+    src = np.concatenate([g.src, g.dst]).astype(np.int64)
+    dst = np.concatenate([g.dst, g.src]).astype(np.int64)
+    deg = np.zeros(n, np.int64)
+    np.add.at(deg, src, 1)
+    v = np.full(n, 1.0 / n)
+    for _ in range(max_iter):
+        contrib = np.where(deg > 0, v / np.maximum(deg, 1), 0.0)
+        nxt = np.full(n, (1.0 - damping) / n)
+        np.add.at(nxt, dst, damping * contrib[src])
+        done = np.abs(nxt - v).sum() <= tol
+        v = nxt
+        if done:
+            break
+    return v
+
+
 def traversed_edges(g: CSRGraph, parent: np.ndarray) -> int:
     """TEPS numerator: input edges with both endpoints in the traversed
     component (Graph500 counts undirected input edges once)."""

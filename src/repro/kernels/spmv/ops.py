@@ -102,3 +102,68 @@ def spmv_pull_min_planes(
     return pull.spmv_pull_min_planes_pallas(
         padded, f_words, u_words, n_cols, interpret=interpret
     )[:, :n_rows]
+
+
+def gspmm_planes(
+    nbr: jax.Array,
+    f_words: jax.Array,
+    x: jax.Array,
+    n_cols: int,
+    alg,
+    *,
+    row_base=0,
+    col_base=0,
+    u_words: jax.Array | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """op x reduce ELL value expansion over (B,) frontier/value planes.
+
+    Each frontier hit proposes ``alg.edge_message(x[src], src + col_base,
+    dst + row_base)``; candidates combine per destination row under the
+    algebra's reduce.  Min-reduces compile to the Pallas value-gather
+    kernel on TPU (op = ``"minplus"`` when the algebra consults edge
+    weights, else ``"copy"``); sum-reduces and the CPU path instantiate
+    the single :func:`repro.kernels.spmv.ref.gspmm` reference with the
+    algebra's message closure.  ``u_words``, if given, masks finished
+    destination rows to the algebra's empty sentinel (pull direction).
+    """
+    n_x = x.shape[1]
+    if alg.reduce == "min" and _use_kernel(interpret):
+        padded, n_rows = _pad_nbr(nbr, n_cols)
+        if n_cols > n_x:
+            x = jnp.pad(x, ((0, 0), (0, n_cols - n_x)), constant_values=alg.empty)
+        bases = jnp.stack(
+            [jnp.asarray(row_base, jnp.int32), jnp.asarray(col_base, jnp.int32)]
+        ).reshape(1, 2)
+        out = spmv.gspmm_min_planes_pallas(
+            padded, f_words, x, bases, n_cols,
+            op="minplus" if alg.uses_weights else "copy",
+            max_weight=getattr(alg, "max_weight", 31),
+            interpret=interpret,
+        )[:, :n_rows]
+        if u_words is not None:
+            rows = jnp.arange(n_rows, dtype=jnp.int32)
+            unreached = jax.vmap(lambda uw: ref.frontier_bit(uw, rows, n_rows))(
+                u_words
+            )
+            out = jnp.where(unreached, out, alg.empty)
+        return out
+
+    if alg.reduce == "min":
+        reduce = None
+    else:
+        reduce = lambda vals, axis: alg.enc(jnp.sum(alg.dec(vals), axis=axis))  # noqa: E731
+
+    def one(fw, xp, uw):
+        def message(rows, cols):
+            xs = xp[jnp.minimum(cols, n_x - 1)]
+            return alg.edge_message(xs, cols + col_base, rows + row_base)
+
+        return ref.gspmm(
+            nbr, fw, n_cols, message=message, reduce=reduce,
+            empty=alg.empty, u_words=uw,
+        )
+
+    if u_words is None:
+        return jax.vmap(lambda fw, xp: one(fw, xp, None))(f_words, x)
+    return jax.vmap(one)(f_words, x, u_words)

@@ -1,8 +1,16 @@
 """Pure-jnp oracle for the ELL frontier-expansion SpMV.
 
-Semantics (min-parent semiring over the boolean frontier):
+One parameterized reference — :func:`gspmm` (the DGL op x reduce shape) —
+stands behind *every* entry point in this package: the min-parent BFS
+semantics
 
     out[r] = min over d of ( nbr[r, d]  if frontier[nbr[r, d]] else INF )
+
+is its ``message=None, reduce=None`` instantiation, the pull direction is
+the same call with an unreached row mask, and the frontier-algebra value
+expansions (SSSP min-plus, CC label copy, PageRank plus-times) pass their
+own message/reduce closures.  The Pallas kernels are oracle-checked
+against this one function.
 
 ``nbr``: (n_rows, max_deg) int32 destination-major neighbor lists, padded
 with ``n_cols`` (which always misses the frontier).  ``frontier``: bitmap
@@ -48,11 +56,49 @@ def frontier_bit(words: jax.Array, idx: jax.Array, n_cols: int) -> jax.Array:
     return (bit == 1) & (idx < n_cols)
 
 
+def gspmm(
+    nbr: jax.Array,
+    f_words: jax.Array,
+    n_cols: int,
+    *,
+    message=None,
+    reduce=None,
+    empty=INF,
+    u_words: jax.Array | None = None,
+) -> jax.Array:
+    """One op x reduce reference behind every ELL expansion entry point.
+
+        out[r] = reduce over d of message(r, nbr[r, d])  where the slot's
+                 source is in the frontier   (``empty`` if none hit)
+
+    ``message(rows, cols)`` maps the (n_rows, max_deg) destination/source
+    id grids to per-slot candidate values; ``None`` is the min-parent copy
+    op (the candidate IS the source id).  ``reduce(vals, axis)`` defaults
+    to ``jnp.min``; sum-algebras pass a decode-add-encode closure whose
+    identity is their ``empty`` sentinel, so no extra masking is needed.
+    ``u_words``, if given, is the packed unreached-row bitmap of the pull
+    direction: finished destination rows collapse to ``empty``.
+    """
+    n_rows = nbr.shape[0]
+    hit = frontier_bit(f_words, nbr, n_cols)
+    if message is None:
+        vals = nbr
+    else:
+        rows = jax.lax.broadcasted_iota(jnp.int32, nbr.shape, 0)
+        vals = message(rows, nbr)
+    cand = jnp.where(hit, vals, empty)
+    out = (jnp.min if reduce is None else reduce)(cand, axis=1)
+    if u_words is not None:
+        unreached = frontier_bit(
+            u_words, jnp.arange(n_rows, dtype=jnp.int32), n_rows
+        )
+        out = jnp.where(unreached, out, empty)
+    return out
+
+
 def spmv_min(nbr: jax.Array, f_words: jax.Array, n_cols: int) -> jax.Array:
     """out (n_rows,) int32 = min frontier neighbor id per row (INF if none)."""
-    hit = frontier_bit(f_words, nbr, n_cols)
-    cand = jnp.where(hit, nbr, INF)
-    return jnp.min(cand, axis=1)
+    return gspmm(nbr, f_words, n_cols)
 
 
 def spmv_min_planes(nbr: jax.Array, f_words: jax.Array, n_cols: int) -> jax.Array:
@@ -81,6 +127,4 @@ def spmv_pull_min(
     vertex is still unreached.  Rows with a clear bit produce INF (they
     neither need a parent nor should pay for the probe on hardware).
     """
-    n_rows = nbr.shape[0]
-    unreached = frontier_bit(u_words, jnp.arange(n_rows, dtype=jnp.int32), n_rows)
-    return jnp.where(unreached, spmv_min(nbr, f_words, n_cols), INF)
+    return gspmm(nbr, f_words, n_cols, u_words=u_words)

@@ -1,10 +1,23 @@
-"""Pallas TPU kernel: ELL frontier-expansion SpMV (min-parent semiring).
+"""Pallas TPU kernels: ELL frontier-expansion SpMV (op x reduce).
 
 Grid = (row tiles, degree chunks).  Per step: a (1024, DC) neighbor tile
 streams into VMEM, the frontier bitmap stays VMEM-resident (BlockSpec with
 a constant index map — at scale 30 the per-rank column bitmap is
 n_c/8 = 8 MB, inside v5e's 16 MB VMEM), membership bits are gathered and
-the per-row min accumulates across degree chunks via output revisiting.
+the per-row reduce accumulates across degree chunks via output revisiting.
+
+Two kernel families share that skeleton:
+
+* ``spmv_min[_planes]_pallas`` — the min-parent BFS instantiation: the
+  candidate IS the neighbor id (op = copy-id, reduce = min).
+* ``gspmm_min_planes_pallas`` — the frontier-algebra value gather: each
+  hit slot gathers the *source value* from a VMEM-resident per-plane value
+  vector (op = ``"copy"``, CC label propagation) or adds the deterministic
+  edge weight re-derived in-register from the global id pair (op =
+  ``"minplus"``, SSSP; the same avalanche hash as
+  :func:`repro.core.algebra.edge_weight`), reduce = min.  Sum-reduces
+  (PageRank) stay on the XLA reference — float accumulation wants the
+  decoded f32 domain, not the int32 transport.
 """
 
 from __future__ import annotations
@@ -62,6 +75,96 @@ def _spmv_planes_kernel(nbr_ref, f_ref, o_ref, *, n_cols: int):
     @pl.when(j > 0)
     def _acc():
         o_ref[...] = jnp.minimum(o_ref[...], tile_min)
+
+
+def _gspmm_planes_kernel(
+    bases_ref, nbr_ref, f_ref, x_ref, o_ref, *, n_cols: int, op: str,
+    max_weight: int,
+):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+    nbr = nbr_ref[...]  # (ROW_TILE, DEG_CHUNK) int32
+    safe = jnp.minimum(nbr, n_cols - 1)
+    within = safe % 1024
+    word_idx = (safe // 1024) * 32 + within % 32
+    shift = (within // 32).astype(jnp.uint32)
+    words = f_ref[0, word_idx]
+    hit = ((words >> shift) & jnp.uint32(1)) == 1
+    x = x_ref[0, safe]  # gather this plane's resident source values
+    if op == "minplus":
+        # re-derive the deterministic edge weight from the global id pair
+        # (identical arithmetic to repro.core.algebra.edge_weight)
+        rows = bases_ref[0, 0] + i * ROW_TILE + jax.lax.broadcasted_iota(
+            jnp.int32, nbr.shape, 0
+        )
+        cols = bases_ref[0, 1] + nbr
+        a = jnp.minimum(rows, cols).astype(jnp.uint32)
+        b = jnp.maximum(rows, cols).astype(jnp.uint32)
+        h = a * jnp.uint32(2654435761) ^ (
+            b * jnp.uint32(40503) + jnp.uint32(2654435769)
+        )
+        h = h ^ (h >> jnp.uint32(16))
+        w = (h % jnp.uint32(max_weight)).astype(jnp.int32) + 1
+        cand = jnp.where(x >= INF - w, INF, x + w)
+    else:
+        assert op == "copy", op
+        cand = x
+    cand = jnp.where(hit & (nbr < n_cols), cand, INF)
+    tile_min = jnp.min(cand, axis=1).reshape(1, ROW_TILE)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = tile_min
+
+    @pl.when(j > 0)
+    def _acc():
+        o_ref[...] = jnp.minimum(o_ref[...], tile_min)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_cols", "op", "max_weight", "interpret")
+)
+def gspmm_min_planes_pallas(
+    nbr: jax.Array,
+    f_words: jax.Array,
+    x: jax.Array,
+    bases: jax.Array,
+    n_cols: int,
+    op: str = "copy",
+    max_weight: int = 31,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Min-reduce value gather over frontier hits, plane-batched.
+
+    ``x`` (B, n_cols) int32 per-plane source values (resident next to the
+    plane's bitmap); ``bases`` (1, 2) int32 = (row_base, col_base) global
+    id offsets of this rank's block — traced, so one compiled kernel
+    serves every rank of the grid.  Returns (B, n_rows) reduced candidates
+    (INF where no slot hit).
+    """
+    interpret = resolve_interpret(interpret)
+    b = f_words.shape[0]
+    n_rows, max_deg = nbr.shape
+    assert n_rows % ROW_TILE == 0, n_rows
+    assert max_deg % DEG_CHUNK == 0, max_deg
+    assert n_cols % 1024 == 0 and f_words.shape[1] == n_cols // 32
+    assert x.shape == (b, n_cols), (x.shape, b, n_cols)
+    grid = (b, n_rows // ROW_TILE, max_deg // DEG_CHUNK)
+    return pl.pallas_call(
+        functools.partial(
+            _gspmm_planes_kernel, n_cols=n_cols, op=op, max_weight=max_weight
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 2), lambda p, i, j: (0, 0)),  # resident bases
+            pl.BlockSpec((ROW_TILE, DEG_CHUNK), lambda p, i, j: (i, j)),
+            pl.BlockSpec((1, n_cols // 32), lambda p, i, j: (p, 0)),  # resident
+            pl.BlockSpec((1, n_cols), lambda p, i, j: (p, 0)),  # resident
+        ],
+        out_specs=pl.BlockSpec((1, ROW_TILE), lambda p, i, j: (p, i)),
+        out_shape=jax.ShapeDtypeStruct((b, n_rows), jnp.int32),
+        interpret=interpret,
+    )(bases, nbr, f_words.astype(jnp.uint32), x)
 
 
 @functools.partial(jax.jit, static_argnames=("n_cols", "interpret"))

@@ -10,7 +10,7 @@ At thousands of nodes, *something* is always failing.  The runtime pieces:
   either restores the newest complete checkpoint or initializes fresh.
 
 Straggler *mitigation* on the collective path is structural: the bucketed
-compressed exchanges (compression/collectives.py) shrink the operand of the
+compressed exchanges (comm/collectives.py) shrink the operand of the
 slowest link, which is where tail latency lives (EXPERIMENTS.md §Perf).
 """
 

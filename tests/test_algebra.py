@@ -1,0 +1,220 @@
+"""The frontier-algebra (semiring) axis: SSSP, CC, PageRank, BFS identity.
+
+The contract: the (message, combine, update) triple is a registry axis,
+and every algebra rides the UNCHANGED wire plans and traversal policies —
+``sssp`` equals host Dijkstra over the same hashed weights, ``cc`` equals
+union-find min labels, ``pagerank`` converges on the global L1 residual,
+and ``bfs`` through the algebra axis is bit-identical to the default
+driver (the pre-refactor triple, extracted, not altered).
+"""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.comm import registry
+from repro.comm.formats import INF
+from repro.core import bfs, validate
+from repro.core.algebra import BfsAlgebra, SsspAlgebra, edge_weight, resolve
+from repro.core.centrality import tree_betweenness
+from repro.graphgen import builder
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _graph(n=48, m=140, seed=3):
+    rng = np.random.default_rng(seed)
+    g = builder.build_csr(rng.integers(0, n, size=(m, 2)), n=n)
+    return g, jnp.asarray(g.src.astype(np.int32)), jnp.asarray(g.dst.astype(np.int32))
+
+
+def test_algebra_registry_axis():
+    """The fifth axis: registered names, instance pass-through, parameters."""
+    assert set(registry.available_algebras()) >= {"bfs", "sssp", "cc", "pagerank"}
+    assert resolve("sssp").name == "sssp"
+    custom = SsspAlgebra(delta=7)
+    assert resolve(custom) is custom  # parameterized instances skip the registry
+    assert resolve("bfs").payload_is_id and not resolve("cc").payload_is_id
+    assert resolve("pagerank").reduce == "sum" and resolve("sssp").reduce == "min"
+
+
+def test_edge_weight_host_device_exact():
+    """The uint32 avalanche hash wraps identically under numpy and jax —
+    the host Dijkstra oracle prices the same weights the kernel relaxes."""
+    rng = np.random.default_rng(0)
+    u = rng.integers(0, 1 << 20, 256)
+    v = rng.integers(0, 1 << 20, 256)
+    w_np = edge_weight(u, v, xp=np)
+    w_j = np.asarray(edge_weight(jnp.asarray(u), jnp.asarray(v)))
+    np.testing.assert_array_equal(w_np, w_j)
+    np.testing.assert_array_equal(w_np, edge_weight(v, u, xp=np))  # symmetric
+    assert w_np.min() >= 1 and w_np.max() <= 31
+
+
+@pytest.mark.parametrize("policy", ["top_down", "bottom_up", "direction_opt"])
+def test_bfs_algebra_bit_identity(policy):
+    """Regression gate for the refactor: BFS routed explicitly through the
+    algebra axis is bit-identical (parent AND level planes) to the default
+    driver, for every traversal policy."""
+    g, src, dst = _graph()
+    roots = np.array([0, 7, 33], np.int32)
+    base = bfs.bfs(src, dst, roots, g.n, policy=policy)
+    for algebra in ("bfs", BfsAlgebra()):
+        res = bfs.bfs(src, dst, roots, g.n, policy=policy, algebra=algebra)
+        np.testing.assert_array_equal(np.asarray(res.parent), np.asarray(base.parent))
+        np.testing.assert_array_equal(np.asarray(res.level), np.asarray(base.level))
+        assert int(res.n_levels) == int(base.n_levels)
+
+
+@pytest.mark.parametrize("policy", ["top_down", "bottom_up", "direction_opt"])
+def test_sssp_matches_dijkstra(policy):
+    g, src, dst = _graph(seed=5)
+    root = int(np.argmax(g.degrees()))
+    host = validate.reference_sssp(g, root)
+    res = bfs.bfs(src, dst, jnp.int32(root), g.n, policy=policy,
+                  algebra="sssp", max_levels=256)
+    np.testing.assert_array_equal(np.asarray(res.parent).astype(np.int64), host)
+    # level records the delta-stepping round a vertex last improved in
+    assert int(res.n_levels) < 256
+
+
+@pytest.mark.parametrize("policy", ["top_down", "bottom_up", "direction_opt"])
+def test_cc_matches_union_find(policy):
+    g, src, dst = _graph(n=64, m=90, seed=9)  # sparse -> several components
+    host = validate.reference_cc(g)
+    assert np.unique(host).size > 1, "test graph should not be connected"
+    res = bfs.bfs(src, dst, jnp.int32(0), g.n, policy=policy,
+                  algebra="cc", max_levels=256)
+    np.testing.assert_array_equal(np.asarray(res.parent).astype(np.int64), host)
+
+
+def test_pagerank_residual_convergence():
+    g, src, dst = _graph(n=64, m=300, seed=2)
+    host = validate.reference_pagerank(g, n=g.n)
+    res = bfs.bfs(src, dst, jnp.int32(0), g.n, algebra="pagerank",
+                  max_levels=256)
+    got = np.asarray(res.parent)
+    # device iterates in f32, host in f64 — both stop on L1 residual 1e-4
+    assert np.abs(got - host).max() < 1e-3
+    assert np.abs(got.sum() - host.sum()) < 1e-2
+    assert int(res.n_levels) < 256  # the residual psum terminated the loop
+    # roots are irrelevant to the fixed point: a different root bit-matches
+    res2 = bfs.bfs(src, dst, jnp.int32(5), g.n, algebra="pagerank",
+                   max_levels=256)
+    np.testing.assert_array_equal(got, np.asarray(res2.parent))
+
+
+def test_tree_betweenness_path_graph():
+    """Promoted centrality API: on a path 0-1-2-3, interior vertices carry
+    all dependency mass (root endpoint excluded)."""
+    parent = np.array([[0, 0, 1, 2]])
+    level = np.array([[0, 1, 2, 3]])
+    bc = tree_betweenness(parent, level, 4)
+    np.testing.assert_allclose(bc, [0.0, 2.0, 1.0, 0.0])
+
+
+def _run(snippet: str, devices: int = 4, timeout: int = 1200) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run(
+        [sys.executable, "-c", snippet],
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=timeout,
+    )
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr[-3000:]}"
+    return out.stdout
+
+
+_DIST_ALGEBRA_SNIPPET = """
+import numpy as np, jax, jax.numpy as jnp
+from repro.comm import CommStats
+from repro.core import csr as csrmod, distributed_bfs as dbfs, validate
+from repro.graphgen import builder
+from repro.launch import roofline
+n = 1 << 10
+ROWS, COLS = 2, %(cols)d
+rng = np.random.default_rng(11)
+g = builder.build_csr(rng.integers(0, n, size=(900, 2)), n=n)
+mesh = jax.make_mesh((ROWS, COLS), ("data", "model"))
+bg = csrmod.partition_2d(g, rows=ROWS, cols=COLS, e_cap_multiple=1024)
+part = bg.part
+root = int(np.argmax(g.degrees()))
+host = {"sssp": validate.reference_sssp(g, root), "cc": validate.reference_cc(g)}
+roots = jnp.asarray(np.array([root], np.int32))
+for alg in ("sssp", "cc"):
+    for mode in ("raw", "bitmap", "auto", "btfly"):
+        for pol in ("top_down", "bottom_up", "direction_opt"):
+            stats = CommStats()
+            cfg = dbfs.DistBFSConfig(mode=mode, policy=pol, algebra=alg,
+                                     max_levels=512)
+            fn = dbfs.build_bfs(mesh, part, cfg, stats=stats)
+            src_l, dst_l = dbfs.shard_blocked(mesh, bg, cfg)
+            val, lev, dep = fn(src_l, dst_l, roots)
+            got = np.asarray(val)[0][:n].astype(np.int64)
+            np.testing.assert_array_equal(
+                got, host[alg], err_msg=f"{alg}/{mode}/{pol}")
+            if pol == "direction_opt":
+                # ledger <-> HLO reconciliation rides the same build
+                compiled = jax.jit(fn).lower(
+                    src_l, dst_l, jax.ShapeDtypeStruct((1,), jnp.int32)
+                ).compile()
+                cmp = roofline.compare_comm_stats(stats, compiled.as_text())
+                assert cmp.match, (alg, mode, pol, cmp.diff())
+print("DIST ALGEBRA OK")
+"""
+
+
+@pytest.mark.slow
+def test_sssp_cc_all_plans_4dev():
+    """Tentpole acceptance on the C=2 grid: SSSP == host Dijkstra and
+    CC == union-find for all 4 wire plans x 3 policies, with the
+    CommStats/HLO reconciliation checked on the adaptive policy."""
+    out = _run(_DIST_ALGEBRA_SNIPPET % {"cols": 2}, devices=4)
+    assert "DIST ALGEBRA OK" in out
+
+
+@pytest.mark.slow
+def test_sssp_cc_all_plans_c3_6dev():
+    """Same property on the C=3 grid: value payloads ride the butterfly
+    fold/unfold stages and the non-power-of-two alltoall geometry."""
+    out = _run(_DIST_ALGEBRA_SNIPPET % {"cols": 3}, devices=6)
+    assert "DIST ALGEBRA OK" in out
+
+
+_DIST_PAGERANK_SNIPPET = """
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import csr as csrmod, distributed_bfs as dbfs, validate
+from repro.graphgen import builder
+n = 1 << 10
+rng = np.random.default_rng(4)
+g = builder.build_csr(rng.integers(0, n, size=(2000, 2)), n=n)
+mesh = jax.make_mesh((2, 2), ("data", "model"))
+bg = csrmod.partition_2d(g, rows=2, cols=2, e_cap_multiple=4096)
+part = bg.part
+host = validate.reference_pagerank(g, n=part.n)
+cfg = dbfs.DistBFSConfig(mode="auto", policy="top_down", algebra="pagerank",
+                         max_levels=256)
+fn = dbfs.build_bfs(mesh, part, cfg)
+src_l, dst_l = dbfs.shard_blocked(mesh, bg, cfg)
+val, lev, dep = fn(src_l, dst_l, jnp.asarray(np.array([3], np.int32)))
+got = np.asarray(val)[0]
+assert int(dep) < 256
+assert np.abs(got - host).max() < 1e-3, np.abs(got - host).max()
+print("DIST PAGERANK OK")
+"""
+
+
+@pytest.mark.slow
+def test_pagerank_distributed_4dev():
+    """The plus-times algebra end-to-end: the f32-bitcast mass planes ride
+    the dense combine wire and the residual psum terminates the loop at
+    the same fixed point as host power iteration (padded-n convention)."""
+    out = _run(_DIST_PAGERANK_SNIPPET, devices=4)
+    assert "DIST PAGERANK OK" in out

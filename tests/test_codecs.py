@@ -106,23 +106,12 @@ def test_threshold_policy():
     assert cpu_on_ici.modeled_speedup(1 << 20, ratio=8.0) < 1.5
 
 
-def test_compression_shim_deprecated():
-    """Satellite: the retired ``repro.compression`` package is one
-    deprecation-warning module whose old submodule paths resolve to their
-    ``repro.comm`` homes."""
-    import sys
+def test_compression_shim_retired():
+    """Satellite: the ``repro.compression`` deprecation shim is gone — the
+    old package name no longer resolves, and the absorbed homes answer."""
+    import importlib
 
-    for m in [m for m in sys.modules if m.startswith("repro.compression")]:
-        sys.modules.pop(m)
-    with pytest.warns(DeprecationWarning, match="repro.comm"):
-        import repro.compression  # noqa: F401
-    from repro.compression import codecs as shim_codecs
-    from repro.compression import registry as shim_registry
-    from repro.compression import threshold as shim_threshold
-
-    assert shim_codecs is codecs
-    assert shim_threshold is threshold
-    assert shim_registry.make_codec is registry.make_codec
-    # the retired registry shim's own aliases stay alive on the proxy
-    assert shim_registry.available is registry.available_codecs
-    assert shim_registry.register is registry.register_codec
+    with pytest.raises(ImportError):
+        importlib.import_module("repro.compression")
+    assert registry.make_codec("bp128d").name == "bp128d"
+    assert codecs is not None and threshold is not None
